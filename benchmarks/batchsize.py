@@ -1,0 +1,27 @@
+"""Paper §2.2 batch-size configuration: doubling search for the inference
+batch size that maximizes decode throughput (measured, reduced configs)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, results_path
+from repro.core.batchsearch import search_batch_size
+from repro.core.suite import build_suite
+
+ARCHS = ["gemma-2b", "mamba2-2.7b", "mixtral-8x7b"]
+
+
+def main(fast: bool = False) -> None:
+    out = {}
+    for b in build_suite(tasks=("infer_decode",), archs=ARCHS[: 1 if fast else 3]):
+        best, hist = search_batch_size(b, seq=32, max_batch=16 if fast else 32)
+        out[b.name] = {"best_batch": best, "history": hist}
+        last = hist[-1] if hist else {}
+        emit(f"batchsize/{b.name}", last.get("median_us", 0.0),
+             f"best_batch={best};points={len(hist)}")
+    with open(results_path("batchsize.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

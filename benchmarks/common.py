@@ -1,0 +1,48 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Dict, List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results")
+
+
+def results_path(name: str) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    return os.path.join(RESULTS, name)
+
+
+def load_dryrun(multi_pod: bool = False) -> Optional[List[Dict[str, Any]]]:
+    p = results_path("dryrun_multi.json" if multi_pod else "dryrun_single.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def run_dryrun_subprocess(arch: str, shape: str, *, multi_pod: bool = False,
+                          rules: Optional[dict] = None,
+                          timeout: int = 1200) -> Dict[str, Any]:
+    """Dry-run in a subprocess so THIS process keeps 1 CPU device."""
+    out = results_path(f"_cell_{arch}_{shape}{'_mp' if multi_pod else ''}.json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if rules:
+        cmd += ["--rules", json.dumps(rules)]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"dryrun {arch}x{shape} failed:\n{r.stderr[-2000:]}")
+    with open(out) as f:
+        return json.load(f)[0]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

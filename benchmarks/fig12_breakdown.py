@@ -1,0 +1,34 @@
+"""Paper Figs. 1-2 + Table 2: execution-time breakdown per benchmark and per
+domain, derived from the dry-run roofline terms (compute / HBM / ICI)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, load_dryrun, results_path, run_dryrun_subprocess
+from repro.core.breakdown import breakdown_rows, domain_table
+
+FALLBACK_CELLS = [("gemma-2b", "train_4k"), ("mamba2-2.7b", "train_4k"),
+                  ("gemma-2b", "decode_32k")]
+
+
+def main(fast: bool = False) -> None:
+    results = load_dryrun()
+    if results is None:
+        results = [run_dryrun_subprocess(a, s) for a, s in FALLBACK_CELLS[: 2 if fast else 3]]
+    rows = breakdown_rows(results)
+    for r in rows:
+        emit(f"fig12/{r['arch']}/{r['shape']}", 0.0,
+             f"compute={r['compute_frac']:.2f};memory={r['memory_frac']:.2f};"
+             f"collective={r['collective_frac']:.2f};dominant={r['dominant']}")
+    for kind, flt in [("train", lambda r: r["shape"].startswith("train")),
+                      ("inference", lambda r: not r["shape"].startswith("train"))]:
+        for d in domain_table(rows, flt):
+            emit(f"table2/{kind}/{d['domain']}", 0.0,
+                 f"n={d['n']};compute={d['compute_frac']:.2f};memory={d['memory_frac']:.2f};"
+                 f"collective={d['collective_frac']:.2f}")
+    with open(results_path("fig12_breakdown.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

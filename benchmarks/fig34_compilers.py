@@ -1,0 +1,39 @@
+"""Paper Figs. 3-4: execution-mode ("compiler") comparison — eager vs jit
+variants, reporting time / host-mem / device-mem ratios (T/CM/GM)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, results_path
+from repro.core.compilers import compare_modes, ratio_table
+from repro.core.suite import build_suite
+
+ARCHS_FULL = ["gemma-2b", "mixtral-8x7b", "mamba2-2.7b", "recurrentgemma-9b",
+              "internlm2-20b", "whisper-large-v3"]
+ARCHS_FAST = ["gemma-2b", "mamba2-2.7b"]
+
+
+def main(fast: bool = False) -> None:
+    archs = ARCHS_FAST if fast else ARCHS_FULL
+    results = {}
+    for b in build_suite(tasks=("train",), archs=archs):
+        modes = ("eager", "jit", "jit_donated") if fast else \
+                ("eager", "jit", "jit_donated", "jit_unrolled", "jit_noremat")
+        results[b.name] = compare_modes(b, batch=2, seq=48, runs=3, modes=modes)
+        for mode, m in results[b.name].items():
+            emit(f"fig34/{b.name}/{mode}", m.median_us,
+                 f"host_peak={m.host_peak_bytes};compile_us={m.compile_us:.0f}")
+    rows = ratio_table(results, base="jit")
+    # time_ratio for the eager rows is eager/jit — i.e. the jit speedup
+    speedups = [r["time_ratio"] for r in rows if r["mode"] == "eager" and r["time_ratio"]]
+    if speedups:
+        import math
+        geo = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+        emit("fig34/jit_speedup_vs_eager_geomean", 0.0, f"{geo:.2f}x")
+    with open(results_path("fig34_compilers.json"), "w") as f:
+        json.dump({k: {mm: m.to_dict() for mm, m in v.items()} for k, v in results.items()},
+                  f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

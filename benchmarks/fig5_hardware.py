@@ -1,0 +1,37 @@
+"""Paper Fig. 5 + Table 3: cross-accelerator projection from the compiled
+roofline terms (A100-like vs MI210-like profiles; also v5e vs v4)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, load_dryrun, results_path, run_dryrun_subprocess
+from repro.core.hardware import HW_PROFILES
+from repro.core.hwcompare import hardware_ratio_table
+
+FALLBACK_CELLS = [("gemma-2b", "train_4k"), ("mamba2-2.7b", "train_4k")]
+
+
+def main(fast: bool = False) -> None:
+    results = load_dryrun()
+    if results is None:
+        results = [run_dryrun_subprocess(a, s) for a, s in FALLBACK_CELLS]
+    for pair in [("a100_like", "mi210_like"), ("tpu_v5e", "tpu_v4")]:
+        rows = hardware_ratio_table(results, *pair)
+        wins = {pair[0]: 0, pair[1]: 0}
+        for r in rows:
+            emit(f"fig5/{pair[0]}_vs_{pair[1]}/{r['arch']}/{r['shape']}", 0.0,
+                 f"ratio={r['ratio']:.3f};winner={r['winner']};dominant={r['dominant']}")
+            wins[r["winner"]] += 1
+        emit(f"fig5/{pair[0]}_vs_{pair[1]}/wins", 0.0,
+             f"{pair[0]}={wins[pair[0]]};{pair[1]}={wins[pair[1]]}")
+        with open(results_path(f"fig5_{pair[0]}_vs_{pair[1]}.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+    # Table 3 analogue: the profiles themselves
+    for name, hw in HW_PROFILES.items():
+        emit(f"table3/{name}", 0.0,
+             f"bf16_tflops={hw.peak_flops_bf16/1e12:.0f};fp32_tflops={hw.peak_flops_fp32/1e12:.1f};"
+             f"hbm_gbs={hw.hbm_bw/1e9:.0f};link_gbs={hw.link_bw/1e9:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced sweep for CI")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (batchsize, fig5_hardware, fig12_breakdown,
+                            fig34_compilers, roofline, table1_suite, table45_ci)
+    tables = {
+        "table1_suite": table1_suite.main,         # Table 1 + coverage (§2.3)
+        "fig12_breakdown": fig12_breakdown.main,   # Figs 1-2 + Table 2
+        "fig34_compilers": fig34_compilers.main,   # Figs 3-4
+        "fig5_hardware": fig5_hardware.main,       # Fig 5 + Table 3
+        "table45_ci": table45_ci.main,             # §4.2, Tables 4-5
+        "batchsize": batchsize.main,               # §2.2 batch-size search
+        "roofline": roofline.main,                 # §Roofline deliverable
+    }
+    failed = 0
+    for name, fn in tables.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(fast=args.fast)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr, flush=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,57 @@
+"""The paper's CI use case (§4.2) end-to-end: nightly suite run, baseline
+store, an injected "bad commit", detection at the 7% threshold, and binary-
+search bisection to the culprit.
+
+    PYTHONPATH=src python examples/regression_ci.py
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.core.ci import run_nightly  # noqa: E402
+from repro.core.harness import RegressionHook, measure  # noqa: E402
+from repro.core.regression import Commit, MetricStore, bisect_commits  # noqa: E402
+from repro.core.suite import build_suite  # noqa: E402
+
+
+def main() -> int:
+    store = MetricStore(tempfile.mktemp(suffix=".json"))
+    archs = ["gemma-2b", "mamba2-2.7b"]
+
+    print("== night 0: record baselines ==")
+    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3, update_baseline=True)
+    print(f"ran {rep.ran} benchmarks in {rep.wall_s:.1f}s")
+
+    print("\n== night 1: a commit slows gemma-2b training by ~50ms/step ==")
+    hooks = {"gemma-2b/train": RegressionHook(slowdown_s=0.05)}
+    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3, hooks=hooks)
+    for issue in rep.issues:
+        print(f"ISSUE: {issue.benchmark} {issue.metric} +{issue.increase:.0%} "
+              f"(baseline {issue.baseline:.0f}, observed {issue.observed:.0f})")
+    assert any(i.metric == "median_us" for i in rep.issues)
+
+    print("\n== bisect the day's 12 commits ==")
+    bench = build_suite(tasks=("train",), archs=["gemma-2b"])[0]
+    step, args, donate = bench.make(batch=2, seq=32)
+    base = store.baseline(bench.name)["median_us"]
+
+    def runner(bad):
+        def run(_name):
+            hook = RegressionHook(slowdown_s=0.05) if bad else None
+            return {"median_us": measure(bench.name, step, args, donate,
+                                         runs=2, hook=hook).median_us}
+        return run
+
+    commits = [Commit(f"c{i:02d}", i, runner(i >= 8)) for i in range(12)]
+    trace: list = []
+    culprit = bisect_commits(commits, bench.name, "median_us", base, trace=trace)
+    for t in trace:
+        print(" ", t)
+    print(f"culprit: {culprit.sha} (found with {len(trace)} measurements of 12 commits)")
+    assert culprit.sha == "c08"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

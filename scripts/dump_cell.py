@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Hillclimb profiler: compile one cell and dump top instructions by bytes
+and the collective breakdown.  (The dry-run-profile counterpart of a trace.)
+
+    PYTHONPATH=src python scripts/dump_cell.py --arch X --shape Y [--opt]
+        [--rules '{"act_seq": ["model"]}'] [--top 15]
+"""
+import os
+from repro.launch import dryrun  # sets XLA_FLAGS incl. the dump dir
+_DUMP = dryrun._DUMP_DIR
+import argparse
+import dataclasses as dc
+import json
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape
+from repro.core import hloanalysis as H
+from repro.distributed import merge_rules, sharding_ctx, spec_tree
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import TrainHyper, make_decode_step, make_prefill_step, make_state_defs, make_train_step
+from repro.models.layers import abstract_tree
+
+
+def compile_cell(arch, shape_name, opt, rules_override=None, multi_pod=False):
+    cfg = get_arch(arch)
+    if opt:
+        cfg = dc.replace(cfg, **dryrun.OPT_CFG)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = merge_rules(dryrun.cell_rules(cfg, shape, opt), rules_override)
+    with sharding_ctx(mesh, rules):
+        dspec = ("pod", "data") if "pod" in mesh.shape else "data"
+        if shape.kind == "train":
+            step, model = make_train_step(cfg, TrainHyper(microbatches=dryrun.TRAIN_MICROBATCHES.get(arch, 1)))
+            sd = make_state_defs(model)
+            batch = dryrun.input_specs(cfg, shape)
+            jitted = jax.jit(step, in_shardings=(spec_tree(sd, mesh, rules),
+                                                 {k: NamedSharding(mesh, P(dspec)) for k in batch}),
+                             out_shardings=(spec_tree(sd, mesh, rules), None), donate_argnums=(0,))
+            return jitted.lower(abstract_tree(sd), batch).compile(), mesh
+        model = make_decode_step(cfg)[1]
+        cache_defs = model.cache_defs(shape.global_batch, shape.seq_len + (cfg.n_prefix or 0))
+        pdefs = model.param_defs()
+        csh = spec_tree(cache_defs, mesh, rules)
+        psh = spec_tree(pdefs, mesh, rules)
+        if shape.kind == "prefill":
+            step, _ = make_prefill_step(cfg, shape.seq_len)
+            batch = dryrun.input_specs(cfg, shape)
+            jitted = jax.jit(step, in_shardings=(psh, {k: NamedSharding(mesh, P(dspec)) for k in batch}, csh),
+                             out_shardings=(None, csh), donate_argnums=(2,))
+            return jitted.lower(abstract_tree(pdefs), batch, abstract_tree(cache_defs)).compile(), mesh
+        step, _ = make_decode_step(cfg)
+        toks = dryrun.input_specs(cfg, shape)["tokens"]
+        tsh = NamedSharding(mesh, P(dspec if shape.global_batch >= 16 else None))
+        jitted = jax.jit(step, in_shardings=(psh, tsh, csh), out_shardings=(None, csh),
+                         donate_argnums=(2,))
+        return jitted.lower(abstract_tree(pdefs), toks, abstract_tree(cache_defs)).compile(), mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opt", action="store_true")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+    rules = json.loads(args.rules) if args.rules else None
+    compiled, mesh = compile_cell(args.arch, args.shape, args.opt, rules, args.multi_pod)
+
+    import glob
+    files = sorted(glob.glob(os.path.join(_DUMP, "*after_spmd-partitioning*.txt")), key=os.path.getmtime)
+    text = open(files[-1]).read() if files else compiled.as_text()
+    print("source:", "post-spmd" if files else "compiled")
+    mod = H._Module(text, fused_bytes=bool(files))
+    rows, colls = [], []
+
+    def walk(comp, mult):
+        for ins in mod.computations.get(comp, ()):
+            ob, _ = H._shape_info(ins.type_str)
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                walk(bm.group(1), mult * (mod.trip_count(cm.group(1)) or 1))
+                continue
+            if ins.op in H._SKIP_BYTES_OPS or ins.op.endswith("-done"):
+                continue
+            if mod.fused_bytes and ins.op in H._ELEMENTWISE_OPS:
+                continue
+            inb = mod._operand_bytes(comp, ins)
+            rows.append(((ob + inb) * mult, ins.op, mult, ins.type_str[:58]))
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in H.COLLECTIVE_OPS:
+                colls.append(((ob + inb) * mult, base, mult, ins.type_str[:58]))
+
+    walk(mod.entry, 1)
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total bytes/dev {total/1e12:.2f} TB")
+    for b, op, mult, t in rows[: args.top]:
+        print(f"  {b/1e12:7.3f}TB x{mult:5d} {op:10s} {t}")
+    colls.sort(reverse=True)
+    print("top collectives:")
+    for b, op, mult, t in colls[:8]:
+        print(f"  {b/1e9:8.2f}GB x{mult:5d} {op:12s} {t}")
+
+
+if __name__ == "__main__":
+    main()

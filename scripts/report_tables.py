@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Render the §Roofline / §Dry-run tables from the sweep JSONs (markdown)."""
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(name):
+    p = os.path.join(REPO, "results", name)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def table(results, title):
+    rows = [r for r in results if "roofline" in r]
+    rows.sort(key=lambda r: (SHAPE_ORDER.get(r["shape"], 9), r["arch"]))
+    out = [f"### {title}", "",
+           "| arch | shape | compute | memory | collective | dominant | useful | GB/dev | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        m = r["memory"]
+        gb = (m["argument_bytes"] + m["temp_bytes"]) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']*1e3:.0f} ms | "
+            f"{rl['memory_s']*1e3:.0f} ms | {rl['collective_s']*1e3:.0f} ms | "
+            f"{rl['dominant']} | {rl['useful_ratio']:.2f} | {gb:.1f} | "
+            f"{'yes' if gb <= 16 else 'NO'} |")
+    skips = [r for r in results if "skipped" in r]
+    for r in skips:
+        out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |")
+    errs = [r for r in results if "error" in r]
+    for r in errs:
+        out.append(f"| {r['arch']} | {r['shape']} | ERROR: {r['error'][:60]} | | | | | | |")
+    out.append("")
+    return "\n".join(out)
+
+
+def improvement(base, opt):
+    bi = {(r["arch"], r["shape"]): r for r in base if "roofline" in r}
+    out = ["### Baseline vs optimized (step-time upper bound, single pod)", "",
+           "| arch | shape | baseline | optimized | speedup |", "|---|---|---|---|---|"]
+    rows = []
+    for r in opt:
+        if "roofline" not in r:
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in bi:
+            continue
+        b = bi[key]["roofline"]["step_time_upper_s"]
+        o = r["roofline"]["step_time_upper_s"]
+        rows.append((key, b, o))
+    rows.sort(key=lambda x: (SHAPE_ORDER.get(x[0][1], 9), x[0][0]))
+    import math
+    logs = []
+    for (a, s), b, o in rows:
+        out.append(f"| {a} | {s} | {b:.2f} s | {o:.2f} s | {b/o:.2f}x |")
+        logs.append(math.log(b / o))
+    if logs:
+        out.append(f"| **geomean** | | | | **{math.exp(sum(logs)/len(logs)):.2f}x** |")
+    out.append("")
+    return "\n".join(out)
+
+
+def main():
+    base = load("dryrun_single.json")
+    opt = load("dryrun_single_opt.json")
+    mp = load("dryrun_multi.json")
+    parts = []
+    if base:
+        parts.append(table(base, "Baseline roofline — single pod 16x16 (paper-faithful)"))
+    if opt:
+        parts.append(table(opt, "Optimized roofline — single pod 16x16 (--opt)"))
+        parts.append(improvement(base, opt))
+    if mp:
+        parts.append(table(mp, "Multi-pod dry-run — 2x16x16 (512 chips)"))
+    text = "\n".join(parts)
+    print(text)
+    if "--write" in sys.argv:
+        with open(os.path.join(REPO, "results", "tables.md"), "w") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()

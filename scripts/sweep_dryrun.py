@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Run the full dry-run sweep, one subprocess per cell (bounded memory),
+merging per-cell JSON into results/dryrun_single.json / dryrun_multi.json.
+
+    PYTHONPATH=src python scripts/sweep_dryrun.py [--multi-pod] [--cells a:s,b:t]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+
+
+def run_cell(arch, shape, multi_pod, rules=None, timeout=2400, opt=False):
+    out = os.path.join(REPO, "results", f"_cell_{arch}_{shape}{'_mp' if multi_pod else ''}.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if opt:
+        cmd.append("--opt")
+    if rules:
+        cmd += ["--rules", json.dumps(rules)]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    t0 = time.time()
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=timeout, cwd=REPO)
+    dt = time.time() - t0
+    if r.returncode != 0 or not os.path.exists(out):
+        return {"arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "error": (r.stderr.strip().splitlines() or ["?"])[-1][:300],
+                "wall_s": round(dt, 1)}
+    with open(out) as f:
+        cell = json.load(f)[0]
+    cell["wall_s"] = round(dt, 1)
+    os.remove(out)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="store_true")
+    ap.add_argument("--cells", default=None, help="comma list arch:shape; default all")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.cells:
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+    else:
+        cells = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
+    name = ("dryrun_multi" if args.multi_pod else "dryrun_single") + ("_opt" if args.opt else "")
+    out_path = args.out or os.path.join(REPO, "results", name + ".json")
+
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"]) for r in results if "error" not in r}
+
+    nerr = 0
+    for arch, shape in cells:
+        if (arch, shape) in done:
+            print(f"[sweep] {arch} x {shape}: cached", flush=True)
+            continue
+        try:
+            cell = run_cell(arch, shape, args.multi_pod, opt=args.opt)
+        except subprocess.TimeoutExpired:
+            cell = {"arch": arch, "shape": shape, "error": "timeout"}
+        status = "SKIP" if "skipped" in cell else ("ERR " + cell["error"][:120] if "error" in cell else
+                 f"ok in {cell.get('wall_s', '?')}s dom={cell['roofline']['dominant']}")
+        print(f"[sweep] {arch} x {shape}: {status}", flush=True)
+        nerr += 1 if "error" in cell else 0
+        results = [r for r in results if not (r["arch"] == arch and r["shape"] == shape)]
+        results.append(cell)
+        with open(out_path, "w") as f:   # checkpoint after every cell
+            json.dump(results, f, indent=1)
+    print(f"[sweep] done: {len(results)} cells, {nerr} errors -> {out_path}")
+    return 1 if nerr else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: atomic commit, async write, retention.
+
+Layout:  <dir>/step_<N>/  with one .npy per flattened leaf + manifest.json.
+Writes go to ``step_<N>.tmp`` and are renamed only after fsync — a crashed
+writer never corrupts the latest checkpoint (restart-safe).  ``save_async``
+snapshots to host memory synchronously (jax.device_get) and writes on a
+background thread, overlapping the disk I/O with the next training steps.
+
+On a real multi-host cluster each host writes only the shards it owns
+(``process_index`` prefix); this container is single-process so the path
+degenerates gracefully.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_pytree(tree, directory: str, step: int, *, process_index: int = 0) -> str:
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for name, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"p{process_index}_{name.replace('/', '__')}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"name": name, "file": fname,
+                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, f"manifest_p{process_index}.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)   # atomic commit
+    return final
+
+
+def restore_pytree(like, directory: str, step: int, *, process_index: int = 0):
+    """Restore into the structure (and shardings, if any) of ``like``."""
+    final = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(final, f"manifest_p{process_index}.json")) as f:
+        manifest = json.load(f)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    flat, treedef = jax.tree.flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        arr = np.load(os.path.join(final, by_name[name]["file"]))
+        if hasattr(leaf, "sharding") and leaf.sharding is not None and hasattr(leaf.sharding, "mesh"):
+            leaves.append(jax.device_put(arr, leaf.sharding))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree.unflatten(treedef, [l for l in leaves])
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async checkpointing with retention and exactly-once commit per step."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(directory, exist_ok=True)
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[concurrent.futures.Future] = None
+        self._lock = threading.Lock()
+
+    def save(self, tree, step: int) -> None:
+        # Snapshot to host memory NOW (values at this step), write later.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_write:
+            self.wait()   # at most one write in flight
+            self._pending = self._pool.submit(self._write, host_tree, step)
+        else:
+            self._write(host_tree, step)
+
+    def _write(self, host_tree, step: int) -> None:
+        save_pytree(host_tree, self.directory, step)
+        self._gc()
+
+    def _gc(self) -> None:
+        with self._lock:
+            steps = sorted(
+                int(d.split("_")[1]) for d in os.listdir(self.directory)
+                if d.startswith("step_") and not d.endswith(".tmp"))
+            for s in steps[: -self.keep]:
+                shutil.rmtree(os.path.join(self.directory, f"step_{s}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def restore_latest(self, like):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return restore_pytree(like, self.directory, step), step

@@ -1,0 +1,24 @@
+from repro.configs.base import (  # noqa: F401
+    ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_arch,
+    get_shape,
+    list_archs,
+    register_arch,
+    shape_applicable,
+)
+# Importing the per-arch modules registers them.
+from repro.configs import (  # noqa: F401
+    gemma_2b,
+    internlm2_20b,
+    nemotron_4_15b,
+    gemma3_12b,
+    deepseek_v2_236b,
+    mixtral_8x7b,
+    whisper_large_v3,
+    paligemma_3b,
+    mamba2_2p7b,
+    recurrentgemma_9b,
+)

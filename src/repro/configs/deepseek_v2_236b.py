@@ -1,0 +1,33 @@
+"""deepseek-v2-236b [arXiv:2405.04434; hf] — MLA kv_lora=512, 2 shared + 160 routed top-6."""
+from repro.configs.base import ModelConfig, register_arch
+
+DEEPSEEK_V2_236B = register_arch(ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: logical heads; cache is the 512-dim latent
+    head_dim=192,            # qk_nope(128) + qk_rope(64)
+    d_ff=12288,              # first dense layer FFN
+    vocab=102400,
+    activation="silu",
+    glu=True,
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    # MoE
+    n_experts=160,
+    top_k=6,
+    n_shared_experts=2,
+    d_ff_expert=1536,
+    first_dense_layers=1,
+    # MLA
+    use_mla=True,
+    kv_lora=512,
+    q_lora=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    source="arXiv:2405.04434; hf",
+    domain="NLP",
+))

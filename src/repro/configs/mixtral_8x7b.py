@@ -1,0 +1,26 @@
+"""mixtral-8x7b [arXiv:2401.04088; hf] — 8 experts top-2, sliding-window attention."""
+from repro.configs.base import ModelConfig, register_arch
+
+MIXTRAL_8X7B = register_arch(ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=32000,
+    activation="silu",
+    glu=True,
+    rope_theta=1000000.0,
+    tie_embeddings=False,
+    local_window=4096,       # SWA on every layer
+    global_every=0,
+    # MoE
+    n_experts=8,
+    top_k=2,
+    d_ff_expert=14336,
+    source="arXiv:2401.04088; hf",
+    domain="NLP",
+))

@@ -1,0 +1,9 @@
+# The paper's primary contribution: TorchBench-style benchmarking
+# infrastructure for the JAX/TPU stack (suite, harness, coverage,
+# breakdown, compiler & hardware comparison, CI regression detection).
+from repro.core.hardware import HW_PROFILES, HardwareProfile  # noqa: F401
+from repro.core.harness import Measurement, RegressionHook, measure  # noqa: F401
+from repro.core.hloanalysis import HloCost, analyze_hlo  # noqa: F401
+from repro.core.regression import Commit, Issue, MetricStore, bisect_commits, detect  # noqa: F401
+from repro.core.roofline import Roofline, roofline_from_cost  # noqa: F401
+from repro.core.suite import Benchmark, build_suite  # noqa: F401

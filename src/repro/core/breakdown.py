@@ -1,0 +1,56 @@
+"""Execution-time breakdown (paper Figs. 1-2 / Table 2 analogue).
+
+TorchBench decomposes wall time into GPU-active / data-movement / idle with
+a profiler.  On the TPU target (no profiler in this container) the same
+decomposition is derived from the dry-run roofline terms:
+
+    busy fraction     = compute_s / step_upper           (MXU active)
+    data movement     = memory_s / step_upper            (HBM-bound exposure)
+    idle (comm-bound) = collective_s / step_upper        (ICI wait)
+
+and aggregated per domain exactly like the paper's Table 2.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Any, Dict, Iterable, List
+
+from repro.configs import ARCHS
+
+
+def breakdown_rows(dryrun_results: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    rows = []
+    for r in dryrun_results:
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        total = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+        if not total:
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r.get("mesh", ""),
+            "domain": ARCHS[r["arch"]].domain if r["arch"] in ARCHS else "?",
+            "compute_frac": rl["compute_s"] / total,
+            "memory_frac": rl["memory_s"] / total,
+            "collective_frac": rl["collective_s"] / total,
+            "dominant": rl["dominant"],
+        })
+    return rows
+
+
+def domain_table(rows: List[Dict[str, Any]], kind_filter=None) -> List[Dict[str, Any]]:
+    acc: Dict[str, List[Dict]] = defaultdict(list)
+    for r in rows:
+        if kind_filter and not kind_filter(r):
+            continue
+        acc[r["domain"]].append(r)
+    out = []
+    for dom, rs in sorted(acc.items()):
+        out.append({
+            "domain": dom,
+            "n": len(rs),
+            "compute_frac": sum(r["compute_frac"] for r in rs) / len(rs),
+            "memory_frac": sum(r["memory_frac"] for r in rs) / len(rs),
+            "collective_frac": sum(r["collective_frac"] for r in rs) / len(rs),
+        })
+    return out

@@ -1,0 +1,46 @@
+"""Nightly CI driver (paper §4.2.1): run the measured suite in all four
+configurations (train/inference x with/without donation as the CPU/GPU
+proxy), compare against the baseline store, file issues, and bisect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.harness import RegressionHook, measure
+from repro.core.regression import Issue, MetricStore, detect
+from repro.core.suite import Benchmark, build_suite
+
+
+@dataclasses.dataclass
+class NightlyReport:
+    ran: int
+    issues: List[Issue]
+    wall_s: float
+
+    def to_dict(self) -> dict:
+        return {"ran": self.ran, "wall_s": self.wall_s,
+                "issues": [i.to_dict() for i in self.issues]}
+
+
+def run_nightly(store: MetricStore, *, archs: Optional[List[str]] = None,
+                tasks=("train", "infer_decode"), runs: int = 5,
+                update_baseline: bool = False,
+                hooks: Optional[Dict[str, RegressionHook]] = None) -> NightlyReport:
+    t0 = time.perf_counter()
+    issues: List[Issue] = []
+    benches = build_suite(tasks=tasks, archs=archs)
+    for b in benches:
+        step, args, donate = b.make()
+        m = measure(b.name, step, args, donate, runs=runs,
+                    hook=(hooks or {}).get(b.name))
+        obs = {"median_us": m.median_us, "host_peak_bytes": m.host_peak_bytes,
+               "device_bytes_delta": m.device_bytes_delta}
+        if update_baseline:
+            store.update(b.name, obs)
+        else:
+            issues.extend(detect(store, b.name, obs))
+    return NightlyReport(ran=len(benches), issues=issues,
+                         wall_s=time.perf_counter() - t0)

@@ -1,0 +1,95 @@
+"""API-surface coverage analysis (the paper's central claim, adapted).
+
+TorchBench's key differentiator is covering 2.3x more of the PyTorch API
+surface than MLPerf.  The JAX analogue has two layers:
+
+* **primitive surface** — the set of jaxpr primitives a benchmark traces
+  through (jax.lax-level API: what the model code exercises);
+* **StableHLO op surface** — the set of ops in the lowered module (what the
+  compiler stack must handle).
+
+``coverage_report`` computes per-benchmark sets, the suite union, and the
+coverage ratio of the suite vs. any single benchmark / sub-suite — the
+quantitative form of the paper's "2.3x MLPerf" comparison (our MLPerf-proxy
+is the single-arch {gemma-2b} sub-suite: one dense LM, which is what a small
+cross-framework suite typically includes).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Iterable, List, Set, Tuple
+
+import jax
+
+
+def jaxpr_primitives(fn: Callable, *args, **kwargs) -> Set[str]:
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    prims: Set[str] = set()
+
+    def walk(jx) -> None:
+        for eqn in jx.eqns:
+            prims.add(eqn.primitive.name)
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    walk(sub)
+
+    walk(jaxpr.jaxpr)
+    return prims
+
+
+def _sub_jaxprs(v: Any):
+    from jax._src.core import ClosedJaxpr, Jaxpr
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+    elif isinstance(v, dict):
+        for x in v.values():
+            yield from _sub_jaxprs(x)
+
+
+_STABLEHLO_OP_RE = re.compile(r"(?:^|\s)(?:%[\w.#]+\s*(?::[\w,\s%]*)?=\s+)?\"?(stablehlo\.[\w.]+|mhlo\.[\w.]+)")
+
+
+def stablehlo_ops(lowered_text: str) -> Set[str]:
+    return {m.group(1).split(".", 1)[1] for m in _STABLEHLO_OP_RE.finditer(lowered_text)}
+
+
+def benchmark_surfaces(bench, *, batch: int = 2, seq: int = 32) -> Tuple[Set[str], Set[str]]:
+    """-> (jaxpr primitive set, stablehlo op set) for a suite Benchmark."""
+    step, args, _donate = bench.make(batch=batch, seq=seq)
+    prims = jaxpr_primitives(step, *args)
+    lowered = jax.jit(step).lower(*args)
+    ops = stablehlo_ops(lowered.as_text())
+    return prims, ops
+
+
+def coverage_report(benches: List, *, baseline_archs: Iterable[str] = ("gemma-2b",),
+                    batch: int = 2, seq: int = 32) -> Dict[str, Any]:
+    per: Dict[str, Dict[str, Any]] = {}
+    union_prims: Set[str] = set()
+    union_ops: Set[str] = set()
+    base_prims: Set[str] = set()
+    base_ops: Set[str] = set()
+    for b in benches:
+        prims, ops = benchmark_surfaces(b, batch=batch, seq=seq)
+        per[b.name] = {"n_primitives": len(prims), "n_stablehlo_ops": len(ops),
+                       "primitives": sorted(prims), "stablehlo_ops": sorted(ops)}
+        union_prims |= prims
+        union_ops |= ops
+        if b.arch in baseline_archs:
+            base_prims |= prims
+            base_ops |= ops
+    return {
+        "per_benchmark": per,
+        "suite_primitives": len(union_prims),
+        "suite_stablehlo_ops": len(union_ops),
+        "baseline_primitives": len(base_prims),
+        "baseline_stablehlo_ops": len(base_ops),
+        "coverage_x_primitives": (len(union_prims) / len(base_prims)) if base_prims else 0.0,
+        "coverage_x_stablehlo": (len(union_ops) / len(base_ops)) if base_ops else 0.0,
+        "union_primitives": sorted(union_prims),
+    }

@@ -1,0 +1,36 @@
+"""Accelerator profiles for roofline projection (paper Fig. 5 / Table 3 analogue).
+
+The TorchBench hardware comparison (A100 vs MI210) becomes a roofline
+projection onto several accelerator profiles from the same compiled
+FLOPs/bytes/collective terms.  TPU v5e is the deployment target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    peak_flops_fp32: float
+    hbm_bw: float               # bytes/s per chip
+    hbm_bytes: float            # capacity per chip
+    link_bw: float              # bytes/s per inter-chip link
+    chips_per_pod: int
+
+    def peak(self, dtype: str = "bf16") -> float:
+        return self.peak_flops_bf16 if dtype == "bf16" else self.peak_flops_fp32
+
+
+HW_PROFILES: Dict[str, HardwareProfile] = {
+    # assignment constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+    "tpu_v5e": HardwareProfile("tpu_v5e", 197e12, 98.5e12, 819e9, 16e9, 50e9, 256),
+    "tpu_v4": HardwareProfile("tpu_v4", 275e12, 137e12, 1200e9, 32e9, 100e9, 1024),
+    # GPU-profile analogues of the paper's Fig.5 comparison
+    "a100_like": HardwareProfile("a100_like", 312e12, 19.5e12, 1555e9, 40e9, 75e9, 8),
+    "mi210_like": HardwareProfile("mi210_like", 181e12, 22.6e12, 1638e9, 64e9, 50e9, 8),
+}
+
+DEFAULT_HW = HW_PROFILES["tpu_v5e"]

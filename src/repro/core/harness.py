@@ -1,0 +1,112 @@
+"""Measurement harness (paper §2.2 discipline).
+
+* measures ONLY the computation phase: inputs are device-resident before
+  timing starts, ``block_until_ready`` bounds the region;
+* runs each benchmark N times and reports the run with the **median**
+  execution time (exactly the paper's protocol), plus mean/p10/p90;
+* collects host peak memory (tracemalloc of the run) and device buffer
+  deltas (live device arrays before/after);
+* a regression-injection hook lets the CI tests create known slowdowns
+  (sleep) and memory bloat (retained buffers) to validate detection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+import time
+import tracemalloc
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Measurement:
+    name: str
+    median_us: float
+    mean_us: float
+    p10_us: float
+    p90_us: float
+    compile_us: float
+    host_peak_bytes: int
+    device_bytes_delta: int
+    runs: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _live_device_bytes() -> int:
+    total = 0
+    for d in jax.live_arrays():
+        try:
+            total += d.nbytes
+        except Exception:   # noqa: BLE001
+            pass
+    return total
+
+
+class RegressionHook:
+    """Injected fault for CI validation: slows steps / leaks buffers."""
+
+    def __init__(self, slowdown_s: float = 0.0, leak_bytes: int = 0):
+        self.slowdown_s = slowdown_s
+        self.leak_bytes = leak_bytes
+        self._leaked = []
+
+    def fire(self) -> None:
+        if self.slowdown_s:
+            time.sleep(self.slowdown_s)
+        if self.leak_bytes:
+            self._leaked.append(jnp.zeros(self.leak_bytes // 4, jnp.float32).block_until_ready())
+
+
+def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] = (),
+            *, runs: int = 10, warmup: int = 1,
+            hook: Optional[RegressionHook] = None) -> Measurement:
+    """Paper protocol: median-of-N timing of the jitted computation phase."""
+    gc.collect()
+    dev0 = _live_device_bytes()
+    jitted = jax.jit(step_fn) if not donate else jax.jit(step_fn)
+    # compile (excluded from the measured region, reported separately)
+    t0 = time.perf_counter()
+    out = jitted(*args)
+    jax.block_until_ready(out)
+    compile_us = (time.perf_counter() - t0) * 1e6
+
+    # donation-aware steady state: thread state through when donated
+    tracemalloc.start()
+    times = []
+    cur_args = args
+    for i in range(warmup + runs):
+        t0 = time.perf_counter()
+        out = jitted(*cur_args)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) * 1e6
+        if hook is not None:
+            hook.fire()
+            dt += (hook.slowdown_s * 1e6)
+        if i >= warmup:
+            times.append(dt)
+        # thread outputs back in for stateful steps (train: state, serve: cache)
+        if donate == (0,) and isinstance(out, tuple) and len(out) == 2:
+            cur_args = (out[0],) + args[1:]
+        elif donate == (2,) and isinstance(out, tuple) and len(out) == 2:
+            cur_args = args[:2] + (out[1],)
+    _, host_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    dev1 = _live_device_bytes()
+    arr = np.array(times)
+    return Measurement(
+        name=name,
+        median_us=float(np.median(arr)),
+        mean_us=float(arr.mean()),
+        p10_us=float(np.percentile(arr, 10)),
+        p90_us=float(np.percentile(arr, 90)),
+        compile_us=compile_us,
+        host_peak_bytes=int(host_peak),
+        device_bytes_delta=int(dev1 - dev0),
+        runs=runs,
+    )

@@ -1,0 +1,316 @@
+"""Trip-count-aware HLO cost analysis from ``compiled.as_text()``.
+
+Why not ``compiled.cost_analysis()``?  Two verified limitations (see
+EXPERIMENTS.md §Dry-run methodology):
+
+1. **while bodies are counted once** — a 60-layer ``lax.scan`` model reports
+   1/60th of its FLOPs.  This module parses the HLO module text, derives each
+   while loop's trip count from its condition computation and multiplies the
+   body cost through (recursively, for nested scans).
+2. Numbers are **per partition** under SPMD — the caller scales by chip count.
+
+It also extracts what cost_analysis cannot: per-collective byte counts
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+including async -start forms), with ring-cost multipliers, for the roofline
+collective term.
+
+The parser is deliberately tolerant: anything it cannot parse contributes
+zero and is recorded in ``notes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_CALL_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_info(type_str: str) -> Tuple[int, int]:
+    """-> (total bytes, elems of first array) for a possibly-tuple type."""
+    total = 0
+    first_elems = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES[dt]
+        if first_elems == 0:
+            first_elems = elems
+    return total, first_elems
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str            # operands + attributes (raw)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    collective_bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + int(v * mult)
+        for k, v in other.collective_bytes_by_op.items():
+            self.collective_bytes_by_op[k] = self.collective_bytes_by_op.get(k, 0.0) + v * mult
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Ops that fuse into their producers/consumers on TPU — when analyzing the
+# *pre-fusion* (post-SPMD-partitioning) module, counting their bytes would
+# double-count traffic the fused kernel never pays.  Their FLOPs still count.
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "negate", "abs",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "sqrt", "rsqrt", "cbrt", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "convert", "compare",
+    "select", "and", "or", "xor", "not", "clamp", "maximum", "minimum",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "broadcast", "reshape", "copy", "cosine", "sine", "atan2", "expm1",
+    "erf", "is-finite", "real", "imag", "reverse", "map", "pad", "slice",
+}
+
+
+class _Module:
+    def __init__(self, text: str, fused_bytes: bool = False):
+        self.computations: Dict[str, List[_Instr]] = {}
+        self.params: Dict[str, Dict[str, str]] = {}   # comp -> param name -> type
+        self.fused_bytes = fused_bytes   # True: pre-fusion module, skip elementwise bytes
+        self._parse(text)
+        self._memo: Dict[str, HloCost] = {}
+        self.notes: List[str] = []
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        self.entry: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_START_RE.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    self.params[cur] = {}
+                    # parse parameter types from the signature
+                    sig = m.group(3)
+                    for pm in re.finditer(r"%?([\w.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)", sig):
+                        self.params[cur][pm.group(1)] = pm.group(2)
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            am = _ASSIGN_RE.match(line)
+            if am:
+                name, rhs = am.groups()
+                # rhs = "TYPE opname(operands), attrs"; TYPE may be a tuple
+                # containing /*index=N*/ comments — find the first op call
+                # token preceded by whitespace (layout tiles like T(256) are
+                # preceded by ':', never by a space).
+                om = _OP_CALL_RE.search(rhs)
+                if not om:
+                    continue
+                type_str = rhs[: om.start()].strip()
+                op = om.group(1)
+                rest = rhs[om.end():]
+                # operands run until the matching close paren; attrs follow.
+                operands = _OPERAND_RE.findall(rest.split("), ")[0] if ")" in rest else rest)
+                self.computations[cur].append(_Instr(name, type_str, op, rest, operands))
+
+    # ---- symbol table ----
+    def _type_of(self, comp: str, name: str) -> Optional[str]:
+        for ins in self.computations.get(comp, ()):
+            if ins.name == name:
+                return ins.type_str
+        return self.params.get(comp, {}).get(name)
+
+    # ---- trip count ----
+    def trip_count(self, cond_comp: str) -> Optional[int]:
+        best = None
+        for ins in self.computations.get(cond_comp, ()):
+            m = _CONST_INT_RE.search(f"= {ins.type_str} {ins.op}({ins.rest}")
+            if ins.op == "constant":
+                mm = re.search(r"constant\((\d+)\)", ins.rest[: 64] if ins.rest else "")
+                # rest holds "N)" for scalar int constants
+                if mm:
+                    v = int(mm.group(1))
+                    best = v if best is None else max(best, v)
+            if m:
+                v = int(m.group(1))
+                best = v if best is None else max(best, v)
+        return best
+
+    # ---- cost ----
+    def cost_of(self, comp: str) -> HloCost:
+        if comp in self._memo:
+            return self._memo[comp]
+        c = HloCost()
+        self._memo[comp] = c   # break cycles defensively
+        for ins in self.computations.get(comp, ()):
+            self._instr_cost(comp, ins, c)
+        return c
+
+    def _operand_bytes(self, comp: str, ins: _Instr) -> float:
+        total = 0.0
+        for op_name in ins.operands:
+            t = self._type_of(comp, op_name)
+            if t:
+                total += _shape_info(t)[0]
+        return total
+
+    def _instr_cost(self, comp: str, ins: _Instr, c: HloCost) -> None:
+        out_bytes, out_elems = _shape_info(ins.type_str)
+        op = ins.op
+
+        if op == "while":
+            body = cond = None
+            bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            cm = _COND_RE.search(ins.rest)
+            if bm:
+                body = bm.group(1)
+            if cm:
+                cond = cm.group(1)
+            trip = self.trip_count(cond) if cond else None
+            if trip is None:
+                trip = 1
+                c.notes.append(f"while {ins.name}: unknown trip count, using 1")
+            if body:
+                c.add(self.cost_of(body), float(trip))
+            return
+
+        if op in ("call", "fusion"):
+            m = _CALLS_RE.search(ins.rest)
+            if m:
+                inner = self.cost_of(m.group(1))
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.collective_counts.items():
+                    c.collective_counts[k] = c.collective_counts.get(k, 0) + v
+                for k, v in inner.collective_bytes_by_op.items():
+                    c.collective_bytes_by_op[k] = c.collective_bytes_by_op.get(k, 0.0) + v
+            # fusion HBM traffic = its own operands + result (interior is on-chip)
+            c.bytes_accessed += out_bytes + self._operand_bytes(comp, ins)
+            return
+
+        if op == "conditional":
+            branches = re.findall(r"(?:true_computation|false_computation|branch_computations=\{)([^,}]+)", ins.rest)
+            best = HloCost()
+            for b in branches:
+                bc = self.cost_of(b.strip().lstrip("%"))
+                if bc.flops >= best.flops:
+                    best = bc
+            c.add(best)
+            c.bytes_accessed += out_bytes + self._operand_bytes(comp, ins)
+            return
+
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in COLLECTIVE_OPS:
+            in_bytes = self._operand_bytes(comp, ins)
+            if base_op == "all-reduce":
+                wire = 2.0 * in_bytes
+            elif base_op == "all-gather":
+                wire = float(out_bytes)
+            else:   # reduce-scatter, all-to-all, collective-permute
+                wire = in_bytes
+            c.collective_bytes += wire
+            c.collective_counts[base_op] = c.collective_counts.get(base_op, 0) + 1
+            c.collective_bytes_by_op[base_op] = c.collective_bytes_by_op.get(base_op, 0.0) + wire
+            c.bytes_accessed += out_bytes + in_bytes
+            return
+        if op.endswith("-done"):
+            return
+
+        if op in _SKIP_BYTES_OPS:
+            return
+
+        # FLOPs
+        if op == "dot":
+            lhs_t = self._type_of(comp, ins.operands[0]) if ins.operands else None
+            contract = 1
+            cm = _CONTRACT_RE.search(ins.rest)
+            if lhs_t and cm and cm.group(1):
+                dims = _dims_of(lhs_t)
+                for idx in cm.group(1).split(","):
+                    i = int(idx)
+                    if i < len(dims):
+                        contract *= dims[i]
+            c.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            rhs_t = self._type_of(comp, ins.operands[1]) if len(ins.operands) > 1 else None
+            kdims = _dims_of(rhs_t) if rhs_t else []
+            kelems = 1
+            for d in kdims:
+                kelems *= d
+            out_feat = kdims[-1] if kdims else 1
+            c.flops += 2.0 * out_elems * (kelems / max(out_feat, 1))
+        elif op in ("custom-call", "sort", "rng", "rng-bit-generator"):
+            pass  # negligible / opaque
+        else:
+            c.flops += float(out_elems)   # elementwise estimate
+
+        if self.fused_bytes and op in _ELEMENTWISE_OPS:
+            return   # fuses into neighbours on TPU: no HBM round-trip
+        c.bytes_accessed += out_bytes + self._operand_bytes(comp, ins)
+
+
+def analyze_hlo(hlo_text: str, fused_bytes: bool = False) -> HloCost:
+    """fused_bytes=True for pre-fusion (post-SPMD-partitioning) modules:
+    elementwise ops contribute FLOPs but no HBM bytes (they fuse on TPU)."""
+    mod = _Module(hlo_text, fused_bytes=fused_bytes)
+    if mod.entry is None:
+        cost = HloCost()
+        cost.notes.append("no ENTRY computation found")
+        return cost
+    cost = HloCost()
+    cost.add(mod.cost_of(mod.entry))
+    return cost

@@ -1,0 +1,49 @@
+"""Cross-accelerator comparison (paper §3.3 / Fig. 5 analogue).
+
+TorchBench's A100-vs-MI210 study found no universal winner: the outcome per
+model hinges on which numeric format its kernels can use (TF32 vs FP32).
+The roofline projection reproduces that structure: for each benchmark cell
+we project step time onto two hardware profiles and report the ratio
+T_a / T_b; the "format" effect is modeled by each profile's bf16:fp32 peak
+ratio applied to the compute term (softmax/normalization FLOPs run at fp32
+rate — approximated by the fp32_frac argument).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List
+
+from repro.core.hardware import HW_PROFILES, HardwareProfile
+
+
+def project_step_time(rl: Dict[str, Any], hw: HardwareProfile, *,
+                      fp32_frac: float = 0.05, overlap: bool = False) -> float:
+    """Project a roofline record (see Roofline.to_dict) onto a profile."""
+    chips = rl["chips"]
+    f = rl["flops_global"]
+    compute = (f * (1 - fp32_frac) / hw.peak_flops_bf16 +
+               f * fp32_frac / hw.peak_flops_fp32) / chips
+    memory = rl["bytes_global"] / (chips * hw.hbm_bw)
+    collective = rl["collective_bytes_global"] / (chips * hw.link_bw)
+    terms = (compute, memory, collective)
+    return max(terms) if overlap else sum(terms)
+
+
+def hardware_ratio_table(dryrun_results: Iterable[Dict[str, Any]],
+                         hw_a: str = "a100_like", hw_b: str = "mi210_like",
+                         **kw) -> List[Dict[str, Any]]:
+    rows = []
+    a, b = HW_PROFILES[hw_a], HW_PROFILES[hw_b]
+    for r in dryrun_results:
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        ta = project_step_time(rl, a, **kw)
+        tb = project_step_time(rl, b, **kw)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            f"t_{hw_a}_s": ta, f"t_{hw_b}_s": tb,
+            "ratio": ta / tb if tb else 0.0,
+            "winner": hw_a if ta < tb else hw_b,
+            "dominant": rl["dominant"],
+        })
+    return rows

@@ -1,0 +1,110 @@
+"""Performance-regression detection and bisection (paper §4.2).
+
+Mirrors the PyTorch-CI integration TorchBench shipped:
+
+* ``MetricStore`` — JSON store of per-benchmark baseline metrics
+  (execution time + host/device memory, in the paper's four configurations).
+* ``detect`` — flags any benchmark whose metric exceeds baseline by the
+  paper's 7% threshold; emits a structured "GitHub issue" record.
+* ``bisect_commits`` — the paper's nightly strategy: check only the nightly
+  build; if it regressed, binary-search the day's commits by timestamp.
+  Commits are modeled as objects with a ``run(benchmark) -> metrics``
+  callable so tests can inject real measured regressions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+THRESHOLD = 0.07   # the paper's 7%
+
+METRICS = ("median_us", "host_peak_bytes", "device_bytes_delta")
+
+
+@dataclasses.dataclass
+class Issue:
+    benchmark: str
+    metric: str
+    baseline: float
+    observed: float
+    increase: float
+    culprit: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class MetricStore:
+    def __init__(self, path: str):
+        self.path = path
+        self.data: Dict[str, Dict[str, float]] = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                self.data = json.load(f)
+
+    def update(self, benchmark: str, metrics: Dict[str, float]) -> None:
+        self.data[benchmark] = {k: float(v) for k, v in metrics.items()}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.data, f, indent=1)
+        os.replace(tmp, self.path)
+
+    def baseline(self, benchmark: str) -> Optional[Dict[str, float]]:
+        return self.data.get(benchmark)
+
+
+def detect(store: MetricStore, benchmark: str, observed: Dict[str, float],
+           *, threshold: float = THRESHOLD,
+           metrics: Sequence[str] = METRICS) -> List[Issue]:
+    base = store.baseline(benchmark)
+    if base is None:
+        return []
+    issues = []
+    for m in metrics:
+        b = base.get(m)
+        o = observed.get(m)
+        if not b or o is None or b <= 0:
+            continue
+        inc = (o - b) / b
+        if inc > threshold:
+            issues.append(Issue(benchmark=benchmark, metric=m, baseline=b,
+                                observed=o, increase=inc))
+    return issues
+
+
+@dataclasses.dataclass
+class Commit:
+    sha: str
+    timestamp: int
+    run: Callable[[str], Dict[str, float]]   # benchmark name -> metrics
+
+
+def bisect_commits(commits: Sequence[Commit], benchmark: str, metric: str,
+                   baseline: float, *, threshold: float = THRESHOLD,
+                   trace: Optional[List[str]] = None) -> Optional[Commit]:
+    """Binary-search the first commit whose metric regresses past threshold.
+
+    Precondition (the nightly check): the last commit is known-regressed.
+    Returns the culprit commit, measuring O(log n) commits.
+    """
+    commits = sorted(commits, key=lambda c: c.timestamp)
+    lo, hi = 0, len(commits) - 1
+
+    def bad(i: int) -> bool:
+        obs = commits[i].run(benchmark)[metric]
+        is_bad = (obs - baseline) / baseline > threshold
+        if trace is not None:
+            trace.append(f"measure {commits[i].sha}: {obs:.1f} ({'bad' if is_bad else 'good'})")
+        return is_bad
+
+    if not bad(hi):
+        return None
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if bad(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    return commits[lo]

@@ -1,0 +1,89 @@
+"""The benchmark suite registry (paper Table 1 analogue).
+
+Every entry is a *computation-phase* benchmark (paper §2.2): a pure jitted
+step over device-resident inputs — no data loading, no checkpointing inside
+the measured region.  Selection criteria metadata mirrors the paper's
+(classic / popular / industrial / diverse).
+
+Two tiers per architecture:
+  * measured  — reduced config, real wall-clock on the host devices
+                (regression CI, compiler comparison);
+  * derived   — full assigned config, compile-only dry-run metrics
+                (roofline, breakdown, hardware comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_arch
+
+CRITERIA = {
+    "gemma-2b": "popular",
+    "internlm2-20b": "popular",
+    "nemotron-4-15b": "industrial",
+    "gemma3-12b": "industrial",
+    "deepseek-v2-236b": "popular",
+    "mixtral-8x7b": "popular",
+    "whisper-large-v3": "industrial",
+    "paligemma-3b": "industrial",
+    "mamba2-2.7b": "classic-successor",
+    "recurrentgemma-9b": "diverse",
+}
+
+DOMAINS = {a: c.domain for a, c in ARCHS.items()}
+
+
+@dataclasses.dataclass
+class Benchmark:
+    name: str                 # e.g. "gemma-2b/train"
+    arch: str
+    task: str                 # train | infer_prefill | infer_decode
+    domain: str
+    criteria: str
+
+    def make(self, *, batch: int = 2, seq: int = 64):
+        """-> (step_fn, args, donate_argnums) on the reduced config."""
+        cfg = get_arch(self.arch).reduced()
+        key = jax.random.key(0)
+        from repro.models import build_model
+        model = build_model(cfg)
+        params = model.init(key)
+        toks = jax.random.randint(jax.random.key(1), (batch, seq), 0, cfg.vocab)
+        extra: Dict[str, Any] = {}
+        if cfg.family == "encdec":
+            extra["frames"] = jax.random.normal(jax.random.key(2), (batch, cfg.enc_seq, cfg.d_model)) * 0.1
+        if cfg.family == "vlm":
+            extra["patch_embeds"] = jax.random.normal(jax.random.key(2), (batch, cfg.n_prefix, cfg.d_model)) * 0.02
+        batch_dict = {"tokens": toks, **extra}
+
+        if self.task == "train":
+            from repro.launch.steps import make_train_step
+            step, _ = make_train_step(cfg)
+            from repro.optim.adamw import adamw_init
+            state = (params, adamw_init(params))
+            return step, (state, batch_dict), (0,)
+        if self.task == "infer_prefill":
+            cache = model.init_cache(batch, seq + 8 + (cfg.n_prefix or 0))
+            return (lambda p, b, c: model.prefill(p, b, c)), (params, batch_dict, cache), (2,)
+        if self.task == "infer_decode":
+            cache = model.init_cache(batch, seq + 8 + (cfg.n_prefix or 0))
+            _, cache = jax.jit(model.prefill)(params, batch_dict, cache)
+            tok1 = toks[:, :1]
+            return (lambda p, t, c: model.decode_step(p, t, c)), (params, tok1, cache), (2,)
+        raise ValueError(self.task)
+
+
+def build_suite(tasks: Tuple[str, ...] = ("train", "infer_prefill", "infer_decode"),
+                archs: Optional[List[str]] = None) -> List[Benchmark]:
+    out = []
+    for arch in sorted(archs or ARCHS):
+        for task in tasks:
+            out.append(Benchmark(
+                name=f"{arch}/{task}", arch=arch, task=task,
+                domain=DOMAINS[arch], criteria=CRITERIA.get(arch, "diverse")))
+    return out

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, SyntheticTokenDataset, make_batch_specs, prefetch_iterator,
+)

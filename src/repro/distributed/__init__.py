@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES_BASE,
+    ShardingCtx,
+    current_ctx,
+    logical,
+    merge_rules,
+    resolve_spec,
+    set_ctx,
+    sharding_ctx,
+    spec_tree,
+)

@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules and divisibility-safe spec resolution.
+
+Every parameter and activation in the framework is annotated with *logical*
+axis names ("w_mlp", "act_batch", ...).  A rules dict maps logical names to
+mesh axis names (or None).  ``resolve_spec`` turns (logical axes, shape) into
+a ``PartitionSpec``, silently dropping mesh axes that do not divide the
+dimension — this is what lets one model definition run on a 1-device CPU
+smoke test, a 256-chip pod and a 512-chip multi-pod without edits.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Mesh axis names used across the framework.  "pod" only exists on the
+# multi-pod mesh; rules may reference it — resolution drops absent axes.
+DATA_AXES = ("pod", "data")
+
+# Baseline rules: DP over (pod, data); TP over model; FSDP = shard the
+# weights' embed dim over data.  Per-arch / per-shape overrides are merged
+# on top (see repro.configs and repro.launch.dryrun).
+LOGICAL_RULES_BASE: dict[str, Any] = {
+    # --- activations ---
+    "act_batch": ("pod", "data"),
+    "act_seq": None,            # set to ("data",) for sequence parallelism
+    "act_q_seq": None,          # attention q-seq SP (set to ("model",))
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "act_group": ("pod", "data"),   # MoE dispatch groups follow batch
+    "act_cap": None,
+    "act_state": None,
+    "act_frames": None,
+    # --- weights ---
+    "w_embed": ("data",),       # FSDP: shard weight d_model dim over data
+    "w_embed_pod": None,        # optionally also over pod (overridden)
+    "w_vocab": ("model",),
+    "w_heads": ("model",),
+    "w_kv_heads": ("model",),
+    "w_qk": None,
+    "w_mlp": ("model",),
+    "w_experts": ("model",),
+    "w_expert_mlp": ("model",), # expert FFN dim: TP fallback when E < axis
+    "w_lora": None,
+    "w_state": None,
+    "w_conv": None,
+    "w_frames": None,
+    # --- never sharded ---
+    "layers": None,
+    "scalar": None,
+    # --- kv cache ---
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,          # ("data",) under long-context SP decode
+    "cache_heads": ("model",),
+    "cache_state": None,
+}
+
+
+def merge_rules(*overrides: Optional[Mapping[str, Any]]) -> dict[str, Any]:
+    rules = dict(LOGICAL_RULES_BASE)
+    for ov in overrides:
+        if ov:
+            rules.update(ov)
+    return rules
+
+
+def _as_tuple(v: Any) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+def resolve_spec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Mapping[str, Any],
+) -> P:
+    """Map logical axes -> PartitionSpec, dropping non-divisible mesh axes."""
+    assert len(axes) == len(shape), (axes, shape)
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            entries.append(None)
+            continue
+        mesh_axes = _as_tuple(rules.get(name))
+        kept = []
+        divisor = 1
+        for ax in mesh_axes:
+            if ax not in mesh.shape or ax in used:
+                continue
+            size = mesh.shape[ax]
+            if dim % (divisor * size) == 0:
+                kept.append(ax)
+                divisor *= size
+        used.update(kept)
+        if not kept:
+            entries.append(None)
+        elif len(kept) == 1:
+            entries.append(kept[0])
+        else:
+            entries.append(tuple(kept))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Optional[Mesh]
+    rules: Mapping[str, Any]
+
+    def spec(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert self.mesh is not None
+        return resolve_spec(axes, shape, self.mesh, self.rules)
+
+    def sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+_TLS = threading.local()
+
+
+def set_ctx(ctx: Optional[ShardingCtx]) -> None:
+    _TLS.ctx = ctx
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Mapping[str, Any]] = None):
+    prev = current_ctx()
+    set_ctx(ShardingCtx(mesh, merge_rules(rules)) if mesh is not None else None)
+    try:
+        yield current_ctx()
+    finally:
+        set_ctx(prev)
+
+
+def logical(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical ``axes``.
+
+    A no-op outside a sharding context (single-device smoke tests).
+    """
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = ctx.spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def spec_tree(defs, mesh: Mesh, rules: Mapping[str, Any]):
+    """Tree of ParamDef/CacheDef-likes (with .axes/.shape) -> tree of NamedSharding."""
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, resolve_spec(d.axes, d.shape, mesh, rules)),
+        defs,
+        is_leaf=lambda d: hasattr(d, "axes"),
+    )

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True off-TPU)
+  ref.py    — pure-jnp oracle used by the model code's XLA path and tests
+"""
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.ssd.ops import ssd  # noqa: F401
+from repro.kernels.rglru.ops import rglru  # noqa: F401

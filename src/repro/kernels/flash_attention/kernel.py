@@ -1,0 +1,128 @@
+"""Flash attention Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention insight (the paper-stack's hottest
+kernel): online-softmax tiling so the S x S score matrix never leaves VMEM.
+Unlike the CUDA formulation (warp-level shuffles, shared-memory banking) the
+TPU version tiles for the MXU: (block_q x head_dim) @ (head_dim x block_k)
+runs on the systolic array; running max / denominator live in VMEM scratch
+that persists across the sequential innermost grid dimension.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks) — TPU executes the last axis
+sequentially per (bh, qi), so scratch accumulators carry across kv blocks.
+Causal/local masking prunes fully-masked kv blocks via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, seq_k: int,
+               mask_type: str, window: int, q_offset: int, softcap: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # block-level prune: skip kv blocks that are entirely masked out
+    q_lo = q_offset + qi * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    if mask_type == "causal":
+        live = k_lo <= q_hi
+    elif mask_type == "local":
+        live = (k_lo <= q_hi) & (ki * block_k + block_k - 1 > q_lo - window)
+    else:
+        live = True
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale           # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, d)
+        # sanitize the kv tail: rows past seq_k may be uninitialized (OOB
+        # block padding); p is 0 there but 0*NaN would poison the matmul.
+        kv_valid = (k_lo + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)) < seq_k
+        v = jnp.where(kv_valid, v, 0.0)
+        k = jnp.where(kv_valid, k, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        if mask_type == "causal":
+            mask = k_pos <= q_pos
+        elif mask_type == "local":
+            mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+        else:
+            mask = k_pos < seq_k
+        mask = mask & (k_pos < seq_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mask_type", "window", "q_offset", "block_q", "block_k",
+                     "softmax_scale", "softcap", "interpret"))
+def flash_attention_bh(q, k, v, *, mask_type: str = "causal", window: int = 0,
+                       q_offset: int = 0, block_q: int = 128, block_k: int = 128,
+                       softmax_scale=None, softcap: float = 0.0,
+                       interpret: bool = True):
+    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D).  GQA handled in ops.py."""
+    BH, Sq, D = q.shape
+    _, Sk, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_k)
+
+    kern = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_k=block_k, seq_k=Sk,
+        mask_type=mask_type, window=window, q_offset=q_offset, softcap=softcap)
+
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((block_q, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Public flash-attention op: GQA layout handling + platform dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, mask_type: str = "causal", window: int = 0,
+                    q_offset: int = 0, softmax_scale: Optional[float] = None,
+                    softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q (B, Sq, H, D), k/v (B, Sk, K, D) with H % K == 0 -> (B, Sq, H, D).
+
+    GQA is flattened to (B*H, S, D) by repeating each kv head over its query
+    group — the kernel sees plain MHA tiles (on real TPU the repeat is free:
+    it lowers to a broadcast in the index map of a production variant; here
+    we keep the memory model simple and explicit).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    assert H % K == 0
+    G = H // K
+    if interpret is None:
+        interpret = not _on_tpu()
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Sk, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Sk, D)
+    out = flash_attention_bh(
+        qf, kf, vf, mask_type=mask_type, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, softmax_scale=softmax_scale,
+        softcap=softcap, interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+This is deliberately the *naive* materialized-scores formulation (the thing
+flash attention avoids); numerically it is the ground truth the kernel must
+match.  The model code's XLA path uses repro.models.layers.attention (the
+chunked online-softmax variant), itself validated against this oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, mask_type: str = "causal", window: int = 0,
+                  q_offset: int = 0, softmax_scale: Optional[float] = None,
+                  softcap: float = 0.0):
+    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D), fp32 math."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = q_offset + jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    if mask_type == "causal":
+        mask = kp <= qp
+    elif mask_type == "local":
+        mask = (kp <= qp) & (kp > qp - window)
+    else:
+        mask = jnp.ones((Sq, Sk), bool)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Public RG-LRU op: gate math in fp32 + kernel dispatch + padding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_scan_kernel
+
+
+def rglru(x, a, *, block_t: int = 16, interpret: Optional[bool] = None):
+    """Linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t over (B,S,D).
+
+    Matches repro.models.rglru.rglru_scan with zero initial state.
+    """
+    B, S, D = x.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a.astype(jnp.float32)), 1e-12)) * x.astype(jnp.float32)
+    bt = min(block_t, S)
+    pad_t = (bt - S % bt) % bt
+    pad_d = (128 - D % 128) % 128 if D > 128 else 0
+    af = a.astype(jnp.float32)
+    if pad_t or pad_d:
+        af = jnp.pad(af, ((0, 0), (0, pad_t), (0, pad_d)))
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
+    h = rglru_scan_kernel(af, b, block_t=bt, block_d=min(128, af.shape[-1]),
+                          interpret=interpret)
+    return h[:, :S, :D].astype(x.dtype)

@@ -1,0 +1,20 @@
+"""Oracle for the RG-LRU kernel: sequential linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b):
+    """a, b (B, S, D) fp32 -> h with h_t = a_t h_{t-1} + b_t, h_{-1} = 0."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    def per_b(ab, bb):
+        h0 = jnp.zeros(ab.shape[-1], jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (ab.astype(jnp.float32), bb.astype(jnp.float32)))
+        return hs
+
+    return jax.vmap(per_b)(a, b).astype(a.dtype)

@@ -1,0 +1,35 @@
+"""Public SSD op: (B, S, H, P) model layout -> kernel layout + padding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_bh
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: Optional[bool] = None):
+    """Model-layout SSD: x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+
+    Matches repro.models.ssm.ssd_chunked / ssd_sequential (zero init state).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L = min(chunk, S)
+    pad = (L - S % L) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, Sp, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, Sp, 1)
+    af = jnp.broadcast_to(A[None, :], (B, H)).reshape(B * H, 1)
+    bf = jnp.repeat(Bm[:, None], H, axis=1).reshape(B * H, Sp, N)
+    cf = jnp.repeat(Cm[:, None], H, axis=1).reshape(B * H, Sp, N)
+    y = ssd_bh(xf, dtf, af, bf, cf, chunk=L, interpret=interpret)
+    return y.reshape(B, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]

@@ -1,0 +1,25 @@
+"""Oracle for the SSD kernel: the sequential per-token recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, bm, cm):
+    """x (BH,S,P), dt (BH,S,1), a (BH,1), bm/cm (BH,S,N) -> (BH,S,P) fp32-exact."""
+    BH, S, P = x.shape
+    N = bm.shape[-1]
+
+    def per_bh(xb, dtb, ab, bb, cb):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * ab[0])               # scalar
+            h = decay * h + jnp.outer(bt, xt * dtt)    # (N, P)
+            y = ct @ h                                 # (P,)
+            return h, y
+        h0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32), dtb[:, 0].astype(jnp.float32),
+                                        bb.astype(jnp.float32), cb.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_bh)(x, dt, a, bm, cm).astype(x.dtype)

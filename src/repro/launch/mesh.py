@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module does not touch jax device state — smoke tests see one
+CPU device; only ``dryrun.py`` forces 512 host devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Optional[Mesh]:
+    """Whatever devices exist, as a 1-D 'data' mesh (CPU smoke paths)."""
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    return jax.make_mesh((n,), ("data",))

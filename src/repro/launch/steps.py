@@ -1,0 +1,92 @@
+"""Jit-able train / prefill / decode steps with sharding-aware state.
+
+``make_state_defs`` declares (params, opt state) as ParamDef trees so the
+launcher can derive NamedShardings without materializing anything —
+``jax.eval_shape`` + these defs are all the dry-run needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.models.layers import ParamDef
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update, opt_state_defs
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    microbatches: int = 1       # gradient accumulation over the batch dim
+
+
+def make_state_defs(model) -> Tuple[Any, OptState]:
+    pdefs = model.param_defs()
+    return pdefs, opt_state_defs(pdefs)
+
+
+def make_train_step(cfg, hyper: TrainHyper = TrainHyper(),
+                    opt_cfg: AdamWConfig = AdamWConfig()):
+    """(state, batch) -> (state, metrics); state = (params, opt_state)."""
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params, opt = state
+        if hyper.microbatches > 1:
+            mb = hyper.microbatches
+            B = batch["tokens"].shape[0]
+            assert B % mb == 0
+
+            def split(x):
+                return x.reshape((mb, B // mb) + x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                (g_acc, l_acc) = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb_i)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            metrics = {"loss": loss_sum / mb, "ppl": jnp.exp(loss_sum / mb)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(opt.step, hyper.warmup_steps, hyper.total_steps, hyper.lr)
+        params, opt, om = adamw_update(params, grads, opt, opt_cfg, lr=lr)
+        return (params, opt), {**metrics, **om, "lr": lr}
+
+    return train_step, model
+
+
+def make_prefill_step(cfg, max_len: int):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits, cache
+
+    return prefill_step, model
+
+
+def make_decode_step(cfg):
+    model = build_model(cfg)
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        return logits, cache
+
+    return serve_step, model

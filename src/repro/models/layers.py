@@ -1,0 +1,428 @@
+"""Shared building blocks: param defs, norms, RoPE, activations, attention.
+
+All modules are pure functions over explicit param pytrees.  Parameters are
+*declared* via ``ParamDef`` trees (shape/dtype/logical axes/init), from which
+we derive: materialized params (``init_tree``), ShapeDtypeStructs
+(``abstract_tree``) and NamedShardings (``repro.distributed.spec_tree``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import current_ctx, logical
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"       # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_tree(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def _init_one(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 0.02
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+    # fan-in normal
+    fan_in = d.shape[0] if len(d.shape) == 1 else int(np.prod(d.shape[:-1]))
+    std = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_tree(defs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(d, k) for d, k in zip(leaves, keys)])
+
+
+def axes_tree(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    # gemma convention: (1 + gamma); with gamma init zeros this is identity.
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma + beta).astype(dtype)
+
+
+def squared_relu(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "gelu_tanh": partial(jax.nn.gelu, approximate=True),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "sq_relu": squared_relu,
+}
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin tables (..., head_dim/2) in fp32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (pure-XLA chunked online-softmax — also the Pallas kernel oracle)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, mask_type: str, window: int, prefix_len: int):
+    """(Q,K) additive bias in fp32 for the given mask type."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if mask_type == "full":
+        allowed = jnp.ones(qp.shape[:1] + kp.shape[1:], dtype=bool)
+    elif mask_type == "causal":
+        allowed = kp <= qp
+    elif mask_type == "local":
+        allowed = (kp <= qp) & (kp > qp - window)
+    elif mask_type == "prefix":
+        allowed = (kp <= qp) | (kp < prefix_len)
+    else:  # pragma: no cover
+        raise ValueError(mask_type)
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+def attention(
+    q: jax.Array,               # (B, Sq, H, D)
+    k: jax.Array,               # (B, Sk, K, D)
+    v: jax.Array,               # (B, Sk, K, D)
+    *,
+    mask_type: str = "causal",
+    window: int = 0,
+    prefix_len: int = 0,
+    q_offset: Any = 0,          # absolute position of q[0] (int or traced)
+    kv_len: Optional[jax.Array] = None,  # valid kv length (decode w/ cache)
+    chunk: int = 512,
+    softmax_scale: Optional[float] = None,
+    logit_softcap: float = 0.0,
+    bf16_probs: bool = False,
+) -> jax.Array:
+    """Memory-bounded attention: lax.scan over KV chunks with online softmax.
+
+    Handles GQA (H a multiple of K), causal / local / prefix / full masks and
+    decode-with-cache (Sq small, kv_len masks the unwritten cache tail).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    Dv = v.shape[-1]
+    assert H % K == 0
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    # GQA + tensor parallelism: the (K, G) head split below would break H-dim
+    # sharding whenever K doesn't divide the model axis (e.g. 48 heads as
+    # 8x6 on a 16-way axis -> replicated attention).  When H divides the
+    # axis but K doesn't, materialize kv per q-head instead (cheap: kv is
+    # the small side of GQA) and keep full head-TP.
+    # (Sq == 1 decode excluded: repeating would amplify the KV-cache read,
+    # and decode attention compute is negligible anyway.)
+    ctx = current_ctx()
+    if G > 1 and Sq > 1 and ctx is not None and ctx.mesh is not None:
+        m = 1
+        ax = ctx.rules.get("act_heads")
+        for a in (ax if isinstance(ax, (tuple, list)) else [ax] if ax else []):
+            m *= ctx.mesh.shape.get(a, 1)
+        if m > 1 and K % m and H % m == 0:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+            K, G = H, 1
+
+    sdt = jnp.bfloat16 if bf16_probs else jnp.float32
+    qf = (q.astype(jnp.float32) * scale).astype(sdt).reshape(B, Sq, K, G, D)
+    # (B,K,G,Sq,D): the kv-chunk dot then writes scores directly in the
+    # (b,k,g,q,s) carry layout — avoids a full-score-tensor transpose.
+    qt = qf.transpose(0, 2, 3, 1, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    if Sk <= chunk or Sq == 1:
+        # single-block path (decode or short sequences)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(sdt),
+                       preferred_element_type=jnp.float32)
+        if logit_softcap > 0:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
+        bias = _mask_bias(q_pos, jnp.arange(Sk), mask_type, window, prefix_len)
+        if kv_len is not None:
+            bias = bias + jnp.where(jnp.arange(Sk)[None, :] < kv_len, 0.0, NEG_INF)
+        s = s + bias
+        p = jax.nn.softmax(s, axis=-1).astype(sdt)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(sdt),
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, K, D)
+    vc = v.reshape(B, n_chunks, chunk, K, Dv)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, idx = inputs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        # bf16_probs: the (Sq x chunk) score tensor — the dominant HBM
+        # traffic of the XLA attention path (EXPERIMENTS §Perf cell A) —
+        # stays bf16 end-to-end; only the running max/denominator/output
+        # accumulator carries are fp32.
+        s = jnp.einsum("bkgqd,bskd->bkgqs", qt, kb.astype(sdt),
+                       preferred_element_type=sdt)
+        if logit_softcap > 0:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
+        bias = _mask_bias(q_pos, k_pos, mask_type, window, prefix_len)
+        valid = k_pos < Sk if kv_len is None else k_pos < kv_len
+        bias = (bias + jnp.where(valid[None, :], 0.0, NEG_INF)).astype(sdt)
+        s = s + bias
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None].astype(sdt))
+        l_new = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(sdt), vb.astype(sdt),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer with optional MLA and KV cache
+# ---------------------------------------------------------------------------
+
+
+def gqa_defs(cfg, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    """Param defs for a standard GQA attention layer (optionally stacked)."""
+    D = cfg.head_dim
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    defs = {
+        "wq": ParamDef(lp + (cfg.d_model, cfg.n_heads, D), la + ("w_embed", "w_heads", "w_qk"), cfg.param_dtype),
+        "wk": ParamDef(lp + (cfg.d_model, cfg.n_kv_heads, D), la + ("w_embed", "w_kv_heads", "w_qk"), cfg.param_dtype),
+        "wv": ParamDef(lp + (cfg.d_model, cfg.n_kv_heads, D), la + ("w_embed", "w_kv_heads", "w_qk"), cfg.param_dtype),
+        "wo": ParamDef(lp + (cfg.n_heads, D, cfg.d_model), la + ("w_heads", "w_qk", "w_embed"), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef(lp + (D,), la + ("w_qk",), cfg.param_dtype, "zeros")
+        defs["k_norm"] = ParamDef(lp + (D,), la + ("w_qk",), cfg.param_dtype, "zeros")
+    return defs
+
+
+def gqa_attention(
+    p: dict,
+    x: jax.Array,                      # (B, S, E)
+    cfg,
+    *,
+    mask_type: str,
+    window: int = 0,
+    prefix_len: int = 0,
+    positions: Optional[jax.Array] = None,   # (S,) absolute positions
+    cache: Optional[dict] = None,      # {"k","v": (B, max, K, D), "len": ()}
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, E = x.shape
+    D = cfg.head_dim
+    cdt = cfg.compute_dtype
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(cdt))
+    if cross_kv is None:
+        k = jnp.einsum("bse,ekd->bskd", x, p["wk"].astype(cdt))
+        v = jnp.einsum("bse,ekd->bskd", x, p["wv"].astype(cdt))
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(S)
+    q_offset = positions[0]
+
+    if cfg.rope_theta > 0 and cross_kv is None:
+        cos, sin = rope_freqs(positions, D, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    kv_len = None
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        idx = cache["len"]
+        Wc = cache["k"].shape[1]
+        ring = mask_type == "local" and Wc == window and window > 0
+        if ring and S > 1:
+            # prefill a ring buffer: attend over the fresh full-length k/v
+            # with the local mask, then store the last W tokens at slots
+            # pos % W (softmax is order-free; RoPE already applied).
+            if S >= Wc:
+                rk = jnp.roll(k[:, -Wc:], S % Wc, axis=1)
+                rv = jnp.roll(v[:, -Wc:], S % Wc, axis=1)
+            else:
+                pad = ((0, 0), (0, Wc - S), (0, 0), (0, 0))
+                rk, rv = jnp.pad(k, pad), jnp.pad(v, pad)
+            new_cache = {"k": rk.astype(cache["k"].dtype),
+                         "v": rv.astype(cache["v"].dtype), "len": idx + S}
+            q_offset = idx
+        elif ring:
+            # decode: write at slot idx % W; all live entries are in-window
+            slot = jax.lax.rem(idx, Wc)
+            k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache = {"k": k_all, "v": v_all, "len": idx + S}
+            k, v = k_all.astype(cdt), v_all.astype(cdt)
+            kv_len = jnp.minimum(idx + S, Wc)
+            mask_type = "full"   # ring membership IS the window mask
+            q_offset = idx
+        else:
+            k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": k_all, "v": v_all, "len": idx + S}
+            k, v = k_all.astype(cdt), v_all.astype(cdt)
+            kv_len = idx + S
+            q_offset = idx
+
+    scale = cfg.softmax_scale if cfg.softmax_scale else None
+    # sequence-parallel attention (act_q_seq -> model via rules override):
+    # shards attention compute over q positions when head count cannot use
+    # the model axis (MQA / odd head counts) — kv stays replicated (tiny).
+    q = logical(q, ("act_batch", "act_q_seq", "act_heads", None))
+    out = attention(
+        q, k, v,
+        mask_type=mask_type, window=window, prefix_len=prefix_len,
+        q_offset=q_offset, kv_len=kv_len, chunk=cfg.attn_chunk,
+        softmax_scale=scale, logit_softcap=cfg.attn_softcap,
+        bf16_probs=cfg.opt_bf16_probs,
+    )
+    out = logical(out, ("act_batch", "act_q_seq", "act_heads", None))
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cdt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP / GLU feed-forward
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(cfg, d_ff: Optional[int] = None, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    defs = {
+        "w_up": ParamDef(lp + (cfg.d_model, d_ff), la + ("w_embed", "w_mlp"), cfg.param_dtype),
+        "w_down": ParamDef(lp + (d_ff, cfg.d_model), la + ("w_mlp", "w_embed"), cfg.param_dtype),
+    }
+    if cfg.glu:
+        defs["w_gate"] = ParamDef(lp + (cfg.d_model, d_ff), la + ("w_embed", "w_mlp"), cfg.param_dtype)
+    return defs
+
+
+def ffn(p: dict, x: jax.Array, cfg) -> jax.Array:
+    cdt = cfg.compute_dtype
+    act = ACTIVATIONS[cfg.activation]
+    h = jnp.einsum("bse,ef->bsf", x, p["w_up"].astype(cdt))
+    if cfg.glu:
+        g = jnp.einsum("bse,ef->bsf", x, p["w_gate"].astype(cdt))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = logical(h, ("act_batch", "act_seq", "act_mlp"))
+    return jnp.einsum("bsf,fe->bse", h, p["w_down"].astype(cdt))
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (mamba2 / recurrentgemma blocks)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """x (B, S, C), w (W, C) depthwise causal conv.
+
+    Returns (y, new_state) where state is the last W-1 inputs (B, W-1, C).
+    """
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i : i + x.shape[1], :] * w[i]
+    return y, new_state

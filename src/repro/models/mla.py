@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Train/prefill: decompress the kv latent to per-head K/V (standard path).
+Decode: *absorbed* path — fold W_uk into the query and W_uv into the output
+projection so attention runs directly against the cached (kv_lora + rope)
+latents.  The cache is (B, S, kv_lora + qk_rope_dim) — 576 floats/token
+instead of 2*128*192: this IS the paper-technique-relevant memory saving.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import logical
+from repro.models.layers import (
+    NEG_INF, ParamDef, apply_rope, attention, rms_norm, rope_freqs,
+)
+
+
+def mla_defs(cfg, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    H = cfg.n_heads
+    return {
+        "wq_a": ParamDef(lp + (cfg.d_model, cfg.q_lora), la + ("w_embed", "w_lora"), cfg.param_dtype),
+        "q_a_norm": ParamDef(lp + (cfg.q_lora,), la + ("w_lora",), cfg.param_dtype, "zeros"),
+        "wq_b": ParamDef(lp + (cfg.q_lora, H, cfg.qk_nope_dim + cfg.qk_rope_dim), la + ("w_lora", "w_heads", "w_qk"), cfg.param_dtype),
+        "wkv_a": ParamDef(lp + (cfg.d_model, cfg.kv_lora + cfg.qk_rope_dim), la + ("w_embed", "w_lora"), cfg.param_dtype),
+        "kv_a_norm": ParamDef(lp + (cfg.kv_lora,), la + ("w_lora",), cfg.param_dtype, "zeros"),
+        "wk_b": ParamDef(lp + (cfg.kv_lora, H, cfg.qk_nope_dim), la + ("w_lora", "w_heads", "w_qk"), cfg.param_dtype),
+        "wv_b": ParamDef(lp + (cfg.kv_lora, H, cfg.v_head_dim), la + ("w_lora", "w_heads", "w_qk"), cfg.param_dtype),
+        "wo": ParamDef(lp + (H, cfg.v_head_dim, cfg.d_model), la + ("w_heads", "w_qk", "w_embed"), cfg.param_dtype),
+    }
+
+
+def _project_q(p, x, cfg):
+    cdt = cfg.compute_dtype
+    q_lat = jnp.einsum("bse,el->bsl", x, p["wq_a"].astype(cdt))
+    q_lat = rms_norm(q_lat, p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lhd->bshd", q_lat, p["wq_b"].astype(cdt))
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+
+
+def _kv_latent(p, x, cfg):
+    cdt = cfg.compute_dtype
+    kv = jnp.einsum("bse,el->bsl", x, p["wkv_a"].astype(cdt))
+    c_kv = rms_norm(kv[..., : cfg.kv_lora], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora:]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,   # {"ckv": (B,max,kv_lora), "krope": (B,max,R), "len"}
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, _ = x.shape
+    cdt = cfg.compute_dtype
+    H, Dn, Dr, Dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(Dn + Dr)
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q_nope, q_rope = _project_q(p, x, cfg)
+    cos, sin = rope_freqs(positions, Dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_kv, k_rope = _kv_latent(p, x, cfg)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is None:
+        # decompress path (train / one-shot prefill-eval)
+        k_nope = jnp.einsum("bsl,lhd->bshd", c_kv, p["wk_b"].astype(cdt))
+        v = jnp.einsum("bsl,lhd->bshd", c_kv, p["wv_b"].astype(cdt))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, Dr))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(q, k, v, mask_type="causal", q_offset=positions[0],
+                        chunk=cfg.attn_chunk, softmax_scale=scale,
+                        bf16_probs=cfg.opt_bf16_probs)
+        out = logical(out, ("act_batch", "act_seq", "act_heads", None))
+        y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cdt))
+        return y, None
+
+    # --- cached path ---
+    idx = cache["len"]
+    ckv_all = jax.lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, idx, 0))
+    kr_all = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype), (0, idx, 0))
+    new_cache = {"ckv": ckv_all, "krope": kr_all, "len": idx + S}
+
+    if S > 1:
+        # Prefill: write the latent cache but run *chunked decompressed*
+        # attention — the absorbed formulation materializes full (Sq x Sk)
+        # scores, which at 32k is exactly the quadratic blow-up flash-style
+        # chunking avoids (see EXPERIMENTS.md: 221 GB/dev before this path).
+        k_nope = jnp.einsum("bsl,lhd->bshd", c_kv, p["wk_b"].astype(cdt))
+        v = jnp.einsum("bsl,lhd->bshd", c_kv, p["wv_b"].astype(cdt))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, Dr))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(q, k, v, mask_type="causal", q_offset=idx,
+                        chunk=cfg.attn_chunk, softmax_scale=scale,
+                        bf16_probs=cfg.opt_bf16_probs)
+        out = logical(out, ("act_batch", "act_seq", "act_heads", None))
+        y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cdt))
+        return y, new_cache
+
+    # --- absorbed decode path (S == 1): attention directly on the latents ---
+    kv_len = idx + S
+    Sk = ckv_all.shape[1]
+
+    # absorb: q_c = q_nope @ W_uk  -> (B,S,H,kv_lora)
+    q_c = jnp.einsum("bshd,lhd->bshl", q_nope, p["wk_b"].astype(cdt))
+    s = jnp.einsum("bshl,btl->bhst", q_c, ckv_all.astype(cdt)).astype(jnp.float32)
+    s = s + jnp.einsum("bshd,btd->bhst", q_rope, kr_all.astype(cdt)).astype(jnp.float32)
+    s = s * scale
+    q_pos = idx + jnp.arange(S)
+    t_pos = jnp.arange(Sk)
+    allowed = (t_pos[None, :] <= q_pos[:, None]) & (t_pos[None, :] < kv_len)
+    s = jnp.where(allowed[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btl->bshl", pr.astype(cdt), ckv_all.astype(cdt))
+    out = jnp.einsum("bshl,lhd->bshd", o_lat, p["wv_b"].astype(cdt))
+    out = logical(out, ("act_batch", "act_seq", "act_heads", None))
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cdt))
+    return y, new_cache
+
+
+def mla_cache_defs(cfg, batch: int, max_len: int, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    cdt = cfg.compute_dtype
+    return {
+        "ckv": ParamDef(lp + (batch, max_len, cfg.kv_lora), la + ("cache_batch", "cache_seq", None), cdt, "zeros"),
+        "krope": ParamDef(lp + (batch, max_len, cfg.qk_rope_dim), la + ("cache_batch", "cache_seq", None), cdt, "zeros"),
+        "len": ParamDef(lp + (), la + (), jnp.int32, "zeros"),
+    }

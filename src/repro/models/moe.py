@@ -1,0 +1,155 @@
+"""Grouped, capacity-based, sort-compacted Mixture-of-Experts FFN.
+
+Design (GShard/Switch-style, adapted to a 2-D TPU mesh):
+
+* Tokens are split into ``G`` dispatch *groups* aligned with the data-
+  parallel sharding, so dispatch gathers never cross data shards.
+* Within each group, assignments (token, expert) are sorted by expert and
+  compacted into an ``(E, C)`` slot table (C = capacity).  Overflow tokens
+  are dropped (capacity_factor controls slack) — weights of dropped slots
+  are zero, preserving differentiability.
+* Expert matmuls are dense einsums over the slot table, sharded
+  ``experts -> model`` (expert parallelism); when E does not divide the
+  model axis (mixtral E=8 on a 16-way axis) the resolver falls back to
+  sharding the expert FFN dim (tensor parallelism inside experts).
+
+FLOPs: 3 * N * top_k * capacity_factor * d_model * d_ff_expert per layer —
+the capacity-factor overhead (not x E / top_k dense waste) is visible in the
+roofline's MODEL_FLOPS / HLO_FLOPs ratio and discussed in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import current_ctx, logical
+from repro.models.layers import ACTIVATIONS, ParamDef
+
+
+def moe_defs(cfg, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    E, dff = cfg.n_experts, cfg.d_ff_expert
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    defs = {
+        # router output dim (E ~ 8-160) stays replicated: sharding it forces
+        # an fp32 all-gather of the full prob tensor before top_k.
+        "router": ParamDef(lp + (cfg.d_model, E), la + ("w_embed", None), cfg.param_dtype),
+        "w_up": ParamDef(lp + (E, cfg.d_model, dff), la + ("w_experts", "w_embed", "w_expert_mlp"), cfg.param_dtype),
+        "w_gate": ParamDef(lp + (E, cfg.d_model, dff), la + ("w_experts", "w_embed", "w_expert_mlp"), cfg.param_dtype),
+        "w_down": ParamDef(lp + (E, dff, cfg.d_model), la + ("w_experts", "w_expert_mlp", "w_embed"), cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        ds = cfg.d_ff_expert * cfg.n_shared_experts
+        defs["shared_up"] = ParamDef(lp + (cfg.d_model, ds), la + ("w_embed", "w_mlp"), cfg.param_dtype)
+        defs["shared_gate"] = ParamDef(lp + (cfg.d_model, ds), la + ("w_embed", "w_mlp"), cfg.param_dtype)
+        defs["shared_down"] = ParamDef(lp + (ds, cfg.d_model), la + ("w_mlp", "w_embed"), cfg.param_dtype)
+    return defs
+
+
+def _n_groups(cfg, n_tokens: int) -> int:
+    if cfg.moe_groups > 0:
+        return cfg.moe_groups
+    ctx = current_ctx()
+    g = 1
+    if ctx is not None and ctx.mesh is not None:
+        for ax in ("pod", "data"):
+            g *= ctx.mesh.shape.get(ax, 1)
+    while n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg, *, return_aux: bool = False):
+    """x (B, S, E_model) -> (B, S, E_model) [, aux dict]."""
+    B, S, d = x.shape
+    cdt = cfg.compute_dtype
+    act = ACTIVATIONS[cfg.activation]
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    G = _n_groups(cfg, N)
+    n = N // G  # tokens per group
+    # capacity per (group, expert)
+    C = max(int(math.ceil(n * k / E * cfg.capacity_factor)), 4)
+    C = min(C, n * k)
+
+    xf = x.reshape(G, n, d)
+    xf = logical(xf, ("act_group", None, "act_embed"))
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("gnd,de->gne", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)           # (G, n, k)
+    if cfg.name.startswith("deepseek"):
+        # deepseek-v2 normalizes the top-k gate weights
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- sort-compact into (G, E, C) slot table ---
+    e_flat = expert_ids.reshape(G, n * k)                      # (G, nk)
+    w_flat = gate_vals.reshape(G, n * k)
+    tok_flat = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k)).reshape(n * k)
+    sort_idx = jnp.argsort(e_flat, axis=-1)                    # stable
+    e_sorted = jnp.take_along_axis(e_flat, sort_idx, axis=-1)
+    w_sorted = jnp.take_along_axis(w_flat, sort_idx, axis=-1)
+    tok_sorted = tok_flat[sort_idx]                            # (G, nk)
+
+    # position within expert group: count of earlier slots w/ same expert
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(e_sorted)   # (G, E)
+    offsets = jnp.cumsum(counts, axis=-1) - counts                     # (G, E)
+    pos = jnp.arange(n * k)[None, :] - jnp.take_along_axis(offsets, e_sorted, axis=-1)
+    keep = pos < C
+
+    # scatter token ids into the slot table; slot n is the padding row
+    slot_tok = jnp.full((G, E * C), n, jnp.int32)
+    slot_w = jnp.zeros((G, E * C), jnp.float32)
+    flat_slot = e_sorted * C + jnp.where(keep, pos, 0)
+    flat_slot = jnp.where(keep, flat_slot, E * C)  # OOB drop (scatter mode)
+    dims = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=(), inserted_window_dims=(0,),
+        scatter_dims_to_operand_dims=(0,))
+
+    def scat(tab, idx, upd):
+        return jax.lax.scatter(
+            tab, idx[:, None], upd, dims,
+            mode=jax.lax.GatherScatterMode.FILL_OR_DROP)
+
+    slot_tok = jax.vmap(scat)(slot_tok, flat_slot, tok_sorted.astype(jnp.int32))
+    slot_w = jax.vmap(scat)(slot_w, flat_slot, w_sorted)
+    slot_tok = slot_tok.reshape(G, E, C)
+    slot_w = slot_w.reshape(G, E, C)
+
+    # --- gather -> expert matmuls -> weighted scatter-add ---
+    xpad = jnp.concatenate([xf, jnp.zeros((G, 1, d), xf.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xpad[:, :, None, :], slot_tok.reshape(G, E * C)[:, :, None, None], axis=1
+    ).reshape(G, E, C, d)
+    xe = logical(xe, ("act_group", "act_experts", "act_cap", "act_embed"))
+
+    h = jnp.einsum("gecd,edf->gecf", xe.astype(cdt), p["w_up"].astype(cdt))
+    g = jnp.einsum("gecd,edf->gecf", xe.astype(cdt), p["w_gate"].astype(cdt))
+    h = act(g) * h
+    h = logical(h, ("act_group", "act_experts", "act_cap", "act_mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cdt))
+    ye = ye * slot_w[..., None].astype(cdt)
+
+    y = jnp.zeros((G, n + 1, d), cdt)
+    y = jax.vmap(lambda acc, idx, upd: acc.at[idx].add(upd))(
+        y, slot_tok.reshape(G, E * C), ye.reshape(G, E * C, d))
+    y = y[:, :n].reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        hs = jnp.einsum("bsd,df->bsf", x.astype(cdt), p["shared_up"].astype(cdt))
+        gs = jnp.einsum("bsd,df->bsf", x.astype(cdt), p["shared_gate"].astype(cdt))
+        y = y + jnp.einsum("bsf,fd->bsd", act(gs) * hs, p["shared_down"].astype(cdt))
+
+    if return_aux:
+        # load-balancing aux loss (Switch): E * sum(frac_tokens * frac_prob)
+        me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+        assign = jax.nn.one_hot(expert_ids[..., 0], E)          # top-1 fraction
+        fe = jnp.mean(assign, axis=(0, 1))
+        aux = {"load_balance": E * jnp.sum(me * fe),
+               "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+        return y.astype(x.dtype), aux
+    return y.astype(x.dtype)

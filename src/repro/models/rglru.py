@@ -1,0 +1,182 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r/i = sigmoid(dense(x))
+
+Implemented as a log-space ``jax.lax.associative_scan`` over the sequence
+(the oracle for the Pallas kernel in ``repro.kernels.rglru``), with an O(1)
+per-token decode update.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import logical
+from repro.models.layers import ParamDef, causal_conv1d
+
+RGLRU_C = 8.0
+
+
+def _gate_defs(cfg, lp, la, D):
+    if cfg.gate_blocks:
+        G = cfg.gate_blocks
+        shape = lp + (G, D // G, D // G)
+        axes = la + ("w_heads", None, None)
+        return {
+            "w_input_gate": ParamDef(shape, axes, cfg.param_dtype),
+            "b_input_gate": ParamDef(lp + (D,), la + ("w_mlp",), cfg.param_dtype, "zeros"),
+            "w_rec_gate": ParamDef(shape, axes, cfg.param_dtype),
+            "b_rec_gate": ParamDef(lp + (D,), la + ("w_mlp",), cfg.param_dtype, "zeros"),
+        }
+    dense_axes = la + (("w_expert_mlp", "w_mlp") if cfg.opt_gate_bf16 else ("w_mlp", "w_expert_mlp"))
+    return {
+        "w_input_gate": ParamDef(lp + (D, D), dense_axes, cfg.param_dtype),
+        "b_input_gate": ParamDef(lp + (D,), la + ("w_mlp",), cfg.param_dtype, "zeros"),
+        "w_rec_gate": ParamDef(lp + (D, D), dense_axes, cfg.param_dtype),
+        "b_rec_gate": ParamDef(lp + (D,), la + ("w_mlp",), cfg.param_dtype, "zeros"),
+    }
+
+
+RGLRU_BLOCK = 512
+
+
+def _assoc(a, b):
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, bh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bh
+
+
+def rglru_scan(x, a, init_state=None):
+    """x, a (B, S, D) fp32; returns (h (B,S,D), h_last (B,D)).
+
+    Linear recurrence h_t = a_t h_{t-1} + b_t with b = sqrt(1-a^2)*x.
+    Long sequences run block-wise (lax.scan over RGLRU_BLOCK-token blocks,
+    associative scan inside, state carried) so fwd+bwd materialization is
+    O(block), not O(S) — the same structure as the Pallas kernel.
+    """
+    B, S, D = x.shape
+    if S > RGLRU_BLOCK and S % RGLRU_BLOCK == 0:
+        b0 = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * x
+        h0 = jnp.zeros((B, D), b0.dtype) if init_state is None else init_state.astype(b0.dtype)
+        nb = S // RGLRU_BLOCK
+        ab = a.reshape(B, nb, RGLRU_BLOCK, D).swapaxes(0, 1)
+        bb = b0.reshape(B, nb, RGLRU_BLOCK, D).swapaxes(0, 1)
+
+        def block(carry, inp):
+            a_i, b_i = inp
+            a2 = jnp.concatenate([jnp.zeros_like(a_i[:, :1]), a_i], axis=1)
+            b2 = jnp.concatenate([carry[:, None], b_i], axis=1)
+            h = _assoc(a2, b2)[:, 1:]
+            return h[:, -1], h
+
+        h_last, hs = jax.lax.scan(block, h0, (ab, bb))
+        return hs.swapaxes(0, 1).reshape(B, S, D), h_last
+
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * x
+    if init_state is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([init_state[:, None].astype(b.dtype), b], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    ah, bh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = bh
+    if init_state is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rglru_step(state, xt, at):
+    """state/xt/at (B, D) -> (h_t, h_t)."""
+    bt = jnp.sqrt(jnp.maximum(1.0 - jnp.square(at), 1e-12)) * xt
+    h = at * state + bt
+    return h, h
+
+
+def rglru_defs(cfg, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    D = cfg.lru_width
+    return {
+        # Griffin recurrent block: two input branches, conv+LRU on one
+        "w_x": ParamDef(lp + (cfg.d_model, D), la + ("w_embed", "w_mlp"), cfg.param_dtype),
+        "w_gate_branch": ParamDef(lp + (cfg.d_model, D), la + ("w_embed", "w_mlp"), cfg.param_dtype),
+        "conv_w": ParamDef(lp + (cfg.conv_width, D), la + ("w_conv", "w_mlp"), cfg.param_dtype, scale=0.2),
+        "conv_b": ParamDef(lp + (D,), la + ("w_mlp",), cfg.param_dtype, "zeros"),
+        # Griffin uses block-diagonal gate matrices (gate_blocks > 0): each
+        # block is local to a model shard — no cross-shard contraction, no
+        # TP psum in fwd or bwd (§Perf cell B).  gate_blocks=0 is a dense
+        # ablation (contraction-sharded -> one psum per gate per direction).
+        **_gate_defs(cfg, lp, la, D),
+        "lambda_p": ParamDef(lp + (D,), la + ("w_mlp",), jnp.float32, "ones"),
+        "w_out": ParamDef(lp + (D, cfg.d_model), la + ("w_mlp", "w_embed"), cfg.param_dtype),
+    }
+
+
+def rglru_cache_defs(cfg, batch: int, layers_prefix: Tuple[int, ...] = ()) -> dict:
+    lp = layers_prefix
+    la = ("layers",) * len(lp)
+    D = cfg.lru_width
+    return {
+        "conv": ParamDef(lp + (batch, cfg.conv_width - 1, D), la + ("cache_batch", None, "cache_heads"), cfg.compute_dtype, "zeros"),
+        "h": ParamDef(lp + (batch, D), la + ("cache_batch", "cache_heads"), jnp.float32, "zeros"),
+        "len": ParamDef(lp + (), la + (), jnp.int32, "zeros"),
+    }
+
+
+def rglru_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
+    """Griffin recurrent block.  u (B, S, E) -> (y, new_cache)."""
+    B, S, E = u.shape
+    cdt = cfg.compute_dtype
+
+    gate = jax.nn.gelu(jnp.einsum("bse,ed->bsd", u, p["w_gate_branch"].astype(cdt)))
+    x = jnp.einsum("bse,ed->bsd", u, p["w_x"].astype(cdt))
+    conv_state = cache["conv"] if cache is not None else None
+    x, new_conv = causal_conv1d(x, p["conv_w"].astype(cdt), conv_state)
+    x = x + p["conv_b"].astype(cdt)
+    x = logical(x, ("act_batch", "act_seq", "act_mlp"))
+
+    xf = x.astype(jnp.float32)
+    gdt = cdt if cfg.opt_gate_bf16 else jnp.float32
+    # bf16 end-to-end gate matmuls (no forced-f32 output): forward psums and
+    # backward cotangent collectives stay bf16 (§Perf cell B).
+    if cfg.gate_blocks:
+        G = cfg.gate_blocks
+        xg = x.astype(gdt).reshape(B, S, G, -1)
+        xg = logical(xg, ("act_batch", "act_seq", "act_heads", None))
+        i_pre = jnp.einsum("bsgd,gdf->bsgf", xg, p["w_input_gate"].astype(gdt)).reshape(B, S, -1)
+        r_pre = jnp.einsum("bsgd,gdf->bsgf", xg, p["w_rec_gate"].astype(gdt)).reshape(B, S, -1)
+    else:
+        i_pre = jnp.einsum("bsd,df->bsf", x.astype(gdt), p["w_input_gate"].astype(gdt))
+        r_pre = jnp.einsum("bsd,df->bsf", x.astype(gdt), p["w_rec_gate"].astype(gdt))
+    i_gate = jax.nn.sigmoid(i_pre.astype(jnp.float32) + p["b_input_gate"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(r_pre.astype(jnp.float32) + p["b_rec_gate"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lambda_p"]) * r_gate
+    a = jnp.exp(log_a)
+    gated_x = i_gate * xf
+
+    new_cache = None
+    if cache is not None and S == 1:
+        h, h_last = rglru_step(cache["h"], gated_x[:, 0], a[:, 0])
+        h = h[:, None]
+        new_cache = {"conv": new_conv, "h": h_last, "len": cache["len"] + 1}
+    else:
+        init = cache["h"] if cache is not None else None
+        h, h_last = rglru_scan(gated_x, a, init_state=init)
+        if cache is not None:
+            new_cache = {"conv": new_conv, "h": h_last, "len": cache["len"] + S}
+
+    y = h.astype(cdt) * gate
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(cdt))
+    return out, new_cache

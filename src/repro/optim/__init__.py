@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptState, adamw_init, adamw_update, opt_state_defs,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.compression import compress_grads, decompress_grads  # noqa: F401

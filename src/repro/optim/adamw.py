@@ -1,0 +1,89 @@
+"""AdamW with fused (single-fusion) update, fp32 state, global-norm clipping.
+
+The update body is a single ``jax.tree.map`` over the parameter pytree so XLA
+emits one fused elementwise kernel per leaf — the JAX analogue of the
+``torch._foreach_*`` fix the paper upstreamed (TorchBench §4.1.1: zero_grad's
+per-tensor kernel storm).  Optimizer state is declared via ParamDefs so it
+inherits each parameter's sharding (ZeRO-style: state is sharded exactly like
+the FSDP-sharded weights — never replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, _is_def
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def opt_state_defs(param_defs) -> OptState:
+    """ParamDef tree for the optimizer state (fp32 moments, param sharding)."""
+    def f(d: ParamDef) -> ParamDef:
+        return ParamDef(d.shape, d.axes, jnp.float32, "zeros")
+
+    mu = jax.tree.map(f, param_defs, is_leaf=_is_def)
+    nu = jax.tree.map(f, param_defs, is_leaf=_is_def)
+    return OptState(step=ParamDef((), (), jnp.int32, "zeros"), mu=mu, nu=nu)
+
+
+def adamw_init(params) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: OptState, cfg: AdamWConfig,
+                 lr: Optional[jax.Array] = None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr_t = (lr if lr is not None else cfg.lr)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm}

@@ -1,0 +1,65 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+Two composable schemes, both applied *before* the data-parallel reduction so
+the wire format (not the math) shrinks:
+
+* bf16 compression: cast fp32 grads to bf16 for the all-reduce and
+  re-promote (2x fewer collective bytes; the roofline's collective term).
+* int8 blockwise quantization with error feedback: per-block absmax scaling;
+  the residual is carried to the next step so the scheme is unbiased in the
+  long run (1-bit-Adam-style EF).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_grads(grads, scheme: str, error: Optional[Any] = None):
+    """-> (wire_tree, new_error).  wire_tree is what crosses the network."""
+    if scheme == "none":
+        return grads, error
+    if scheme == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), error
+
+    if scheme == "int8_ef":
+        if error is None:
+            error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        def q(g, e):
+            g = g.astype(jnp.float32) + e
+            flat = g.reshape(-1)
+            pad = (-flat.size) % BLOCK
+            fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+            scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+            qv = jnp.clip(jnp.round(fp / jnp.maximum(scale, 1e-12)), -127, 127).astype(jnp.int8)
+            deq = (qv.astype(jnp.float32) * scale).reshape(-1)[: flat.size].reshape(g.shape)
+            return (qv, scale.astype(jnp.float32)), g - deq
+
+        leaves, treedef = jax.tree.flatten(grads)
+        errs = jax.tree.leaves(error)
+        out = [q(g, e) for g, e in zip(leaves, errs)]
+        wire = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_err = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return wire, new_err
+    raise ValueError(scheme)
+
+
+def decompress_grads(wire, scheme: str, like=None):
+    if scheme == "none":
+        return wire
+    if scheme == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), wire)
+    if scheme == "int8_ef":
+        def dq(pair, ref):
+            qv, scale = pair
+            deq = (qv.astype(jnp.float32) * scale).reshape(-1)[: ref.size]
+            return deq.reshape(ref.shape)
+        leaves_like = jax.tree.leaves(like)
+        flat, treedef = jax.tree.flatten(wire, is_leaf=lambda x: isinstance(x, tuple))
+        return jax.tree.unflatten(treedef, [dq(p, r) for p, r in zip(flat, leaves_like)])
+    raise ValueError(scheme)

@@ -1,0 +1,3 @@
+from repro.runtime.supervisor import (  # noqa: F401
+    ElasticPlan, HeartbeatMonitor, Supervisor, elastic_rescale_plan,
+)

@@ -1,0 +1,170 @@
+"""Cluster-runtime layer: restart supervision, straggler detection, elastic
+rescale planning.
+
+On a real TPU fleet this wraps the per-host training processes; the control
+logic is hardware-independent and is exercised end-to-end by the tests and
+``examples/fault_tolerance.py`` with simulated failures:
+
+* ``Supervisor.run`` — step loop with checkpoint/restart: any exception in a
+  step (a lost host surfaces as one) rolls back to the latest checkpoint and
+  replays, with bounded retries.  The deterministic data pipeline makes the
+  replay bit-exact.
+* ``HeartbeatMonitor`` — per-host step-time tracking; hosts slower than
+  ``straggler_factor`` x the running median are flagged.  Policy hooks:
+  "observe" (log), "evict" (remove from the healthy set -> triggers elastic
+  rescale), mirroring what MaxText/Borg-style schedulers do.
+* ``elastic_rescale_plan`` — given the healthy device count, recompute the
+  largest (data, model) mesh <= available chips that preserves model-axis
+  divisibility, and the per-axis migration (which checkpoint shards each new
+  host loads).  Scale-down keeps global batch by raising per-replica batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+log = logging.getLogger("repro.runtime")
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, straggler_factor: float = 1.5, window: int = 16):
+        self.n_hosts = n_hosts
+        self.factor = straggler_factor
+        self.window = window
+        self._times: Dict[int, List[float]] = {h: [] for h in range(n_hosts)}
+        self.healthy = set(range(n_hosts))
+
+    def report(self, host: int, step_time: float) -> None:
+        t = self._times[host]
+        t.append(step_time)
+        if len(t) > self.window:
+            t.pop(0)
+
+    def last_beat(self, host: int) -> Optional[float]:
+        t = self._times[host]
+        return t[-1] if t else None
+
+    def stragglers(self) -> List[int]:
+        med = [np.median(self._times[h]) for h in self.healthy if self._times[h]]
+        if not med:
+            return []
+        fleet_median = float(np.median(med))
+        out = []
+        for h in sorted(self.healthy):
+            if self._times[h] and np.median(self._times[h]) > self.factor * fleet_median:
+                out.append(h)
+        return out
+
+    def evict(self, host: int) -> None:
+        self.healthy.discard(host)
+
+
+# ---------------------------------------------------------------------------
+# Elastic rescale planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    per_replica_batch_multiplier: int
+    dropped_chips: int
+    note: str
+
+
+def elastic_rescale_plan(
+    healthy_chips: int,
+    *,
+    model_parallel: int = 16,
+    global_batch: int = 256,
+    multi_pod: bool = False,
+) -> ElasticPlan:
+    """Largest coherent mesh under the healthy-chip budget.
+
+    The model axis is load-bearing (weights are TP-sharded over it) so it is
+    preserved; the data axis shrinks to the largest divisor of the remaining
+    chips that also divides global_batch (keeping the batch exact).
+    """
+    assert healthy_chips >= model_parallel, "cannot keep model axis"
+    data = healthy_chips // model_parallel
+    while data > 1 and global_batch % data:
+        data -= 1
+    used = data * model_parallel
+    shape: Tuple[int, ...]
+    names: Tuple[str, ...]
+    if multi_pod and data % 2 == 0:
+        shape, names = (2, data // 2, model_parallel), ("pod", "data", "model")
+    else:
+        shape, names = (data, model_parallel), ("data", "model")
+    return ElasticPlan(
+        mesh_shape=shape,
+        axis_names=names,
+        per_replica_batch_multiplier=global_batch // data,
+        dropped_chips=healthy_chips - used,
+        note=f"kept model={model_parallel}, data {data}; "
+             f"{healthy_chips - used} chips idle until next rescale window",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Restart supervision
+# ---------------------------------------------------------------------------
+
+
+class Supervisor:
+    """Checkpoint/restart step-loop wrapper with bounded retries.
+
+    ``step_fn(state, step) -> state`` may raise (injected faults in tests,
+    real XLA/host errors in production).  On failure the supervisor restores
+    the latest checkpoint and replays from there.
+    """
+
+    def __init__(self, ckpt_manager, *, save_every: int = 10, max_restarts: int = 5,
+                 monitor: Optional[HeartbeatMonitor] = None):
+        self.ckpt = ckpt_manager
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.monitor = monitor
+        self.restarts = 0
+        self.events: List[str] = []
+
+    def run(self, state, step_fn: Callable[[Any, int], Any], n_steps: int,
+            *, start_step: int = 0):
+        step = start_step
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                state = step_fn(state, step)
+                dt = time.perf_counter() - t0
+                if self.monitor is not None:
+                    self.monitor.report(0, dt)
+                step += 1
+                if step % self.save_every == 0:
+                    self.ckpt.save(state, step)
+                    self.events.append(f"ckpt@{step}")
+            except Exception as e:  # noqa: BLE001 — any step fault is restartable
+                self.restarts += 1
+                self.events.append(f"fault@{step}:{type(e).__name__}")
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(f"exceeded {self.max_restarts} restarts") from e
+                self.ckpt.wait()
+                restored, ck_step = self.ckpt.restore_latest(state)
+                if restored is None:
+                    ck_step = start_step
+                    self.events.append("restart@init")
+                else:
+                    state = restored
+                    self.events.append(f"restore@{ck_step}")
+                step = ck_step or start_step
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) for the chunked-attention invariants and
+the sharding resolver — the system's core numeric/distribution invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.layers import attention
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=20)
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    sq=st.integers(1, 48),
+    sk_extra=st.integers(0, 64),
+    h=st.sampled_from([1, 2, 4]),
+    kv=st.sampled_from([1, 2]),
+    d=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([7, 16, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_attention_matches_naive(sq, sk_extra, h, kv, d, chunk, seed):
+    if h % kv:
+        kv = 1
+    sk = sq + sk_extra
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, sq, h, d))
+    k = jax.random.normal(k2, (1, sk, kv, d))
+    v = jax.random.normal(k3, (1, sk, kv, d))
+    out = attention(q, k, v, mask_type="causal", q_offset=sk - sq, chunk=chunk)
+    g = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(h, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(h, sk, d)
+    ref = attention_ref(qf, kf, vf, mask_type="causal", q_offset=sk - sq)
+    ref = ref.reshape(1, h, sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@given(
+    sq=st.integers(2, 32),
+    h=st.sampled_from([1, 2]),
+    d=st.sampled_from([8, 16]),
+    scale_pow=st.integers(-3, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_softmax_invariants(sq, h, d, scale_pow, seed):
+    """Output is a convex combination of V rows: bounded by min/max of v."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, sq, h, d)) * (2.0 ** scale_pow)
+    k = jax.random.normal(k2, (1, sq, h, d)) * (2.0 ** scale_pow)
+    v = jax.random.normal(k3, (1, sq, h, d))
+    out = attention(q, k, v, mask_type="causal", chunk=8)
+    vmin, vmax = float(v.min()), float(v.max())
+    assert float(out.min()) >= vmin - 1e-4
+    assert float(out.max()) <= vmax + 1e-4
+
+
+@given(
+    shape=st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 32, 48, 256]),
+                   min_size=1, max_size=4),
+    seed=st.integers(0, 999),
+)
+def test_resolve_spec_always_valid(shape, seed):
+    """resolve_spec output must always evenly partition the array."""
+    import random
+    from jax.sharding import Mesh
+    from repro.distributed.sharding import LOGICAL_RULES_BASE, resolve_spec
+    rnd = random.Random(seed)
+    names = list(LOGICAL_RULES_BASE)
+    axes = tuple(rnd.choice(names + [None]) for _ in shape)
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    spec = resolve_spec(axes, shape, mesh, LOGICAL_RULES_BASE)
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        axes_t = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes_t:
+            total *= mesh.shape[a]
+        assert dim % total == 0, (shape, axes, spec)
+    # no mesh axis used twice
+    used = []
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        used += list(entry) if isinstance(entry, tuple) else [entry]
+    assert len(used) == len(set(used))

@@ -1,0 +1,33 @@
+"""Integration: the multi-pod dry-run path end-to-end, in a subprocess (so
+this test process keeps its single CPU device).  One representative cell per
+mesh — the full 40-cell sweep is scripts/sweep_dryrun.py."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run([sys.executable, "-m", "repro.launch.dryrun", *args],
+                          env=env, cwd=REPO, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+@pytest.mark.parametrize("extra", [[], ["--multi-pod"]], ids=["16x16", "2x16x16"])
+def test_dryrun_cell_compiles(tmp_path, extra):
+    out = str(tmp_path / "cell.json")
+    r = _run(["--arch", "gemma-2b", "--shape", "decode_32k", "--json", out] + extra)
+    assert r.returncode == 0, r.stderr[-2000:]
+    cell = json.load(open(out))[0]
+    rl = cell["roofline"]
+    assert rl["chips"] == (512 if extra else 256)
+    assert rl["flops_global"] > 0 and rl["collective_bytes_global"] > 0
+    assert cell["memory"]["temp_bytes"] > 0
+    assert cell["cost_source"] == "post_spmd_partitioning"
+    # decode at 32k with a 128-seq batch must be memory-bound
+    assert rl["dominant"] in ("memory", "collective")

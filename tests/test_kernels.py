@@ -1,0 +1,96 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles, executed with interpret=True (kernel body runs on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.ssd.ops import ssd
+from repro.models.ssm import ssd_sequential
+
+
+def _fa_ref(q, k, v, **kw):
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, k.shape[1], D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, k.shape[1], D)
+    return attention_ref(qf, kf, vf, **kw).reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (1, 128, 2, 2, 32), (2, 256, 4, 2, 64), (1, 192, 8, 1, 128), (2, 64, 4, 4, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, S, H, K, D, dtype):
+    q = jax.random.normal(jax.random.key(1), (B, S, H, D), dtype)
+    k = jax.random.normal(jax.random.key(2), (B, S, K, D), dtype)
+    v = jax.random.normal(jax.random.key(3), (B, S, K, D), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = _fa_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("mask,window", [("causal", 0), ("local", 32), ("local", 100), ("full", 0)])
+def test_flash_attention_masks(mask, window):
+    B, S, H, D = 1, 160, 2, 64   # S not a multiple of block: tests tail masking
+    q = jax.random.normal(jax.random.key(1), (B, S, H, D))
+    k = jax.random.normal(jax.random.key(2), (B, S, H, D))
+    v = jax.random.normal(jax.random.key(3), (B, S, H, D))
+    out = flash_attention(q, k, v, mask_type=mask, window=window, block_q=64, block_k=64)
+    ref = _fa_ref(q, k, v, mask_type=mask, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_softcap_and_offset():
+    B, S, H, D = 1, 128, 2, 32
+    q = jax.random.normal(jax.random.key(1), (B, 32, H, D))
+    k = jax.random.normal(jax.random.key(2), (B, S, H, D))
+    v = jax.random.normal(jax.random.key(3), (B, S, H, D))
+    out = flash_attention(q, k, v, q_offset=96, softcap=30.0, block_q=32, block_k=64)
+    ref = _fa_ref(q, k, v, q_offset=96, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 32, 16), (2, 96, 3, 16, 32, 32), (1, 128, 1, 32, 16, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_sequential(B, S, H, P, N, chunk, dtype):
+    x = jax.random.normal(jax.random.key(4), (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(5), (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(jax.random.key(6), (H,)) * 0.3)
+    Bm = (jax.random.normal(jax.random.key(7), (B, S, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(jax.random.key(8), (B, S, N)) * 0.3).astype(dtype)
+    yk = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, _ = ssd_sequential(x.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-5
+    np.testing.assert_allclose(np.asarray(yk, np.float32), np.asarray(yr, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,D,block_t", [(1, 64, 64, 16), (2, 48, 96, 16), (1, 128, 128, 32)])
+def test_rglru_kernel_vs_ref(B, S, D, block_t):
+    x = jax.random.normal(jax.random.key(9), (B, S, D))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(10), (B, S, D)) * 2)
+    hk = rglru(x, a, block_t=block_t)
+    b = jnp.sqrt(1 - a ** 2) * x
+    hr = rglru_ref(a, b)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=2e-5, rtol=2e-5)
+
+
+def test_rglru_extreme_decay_stability():
+    """a -> 0 and a -> 1 extremes must stay finite (log-space blocking)."""
+    B, S, D = 1, 32, 128
+    x = jax.random.normal(jax.random.key(0), (B, S, D))
+    a = jnp.concatenate([jnp.full((B, S, D // 2), 1e-6), jnp.full((B, S, D // 2), 1 - 1e-6)], -1)
+    h = rglru(x, a, block_t=16)
+    assert bool(jnp.all(jnp.isfinite(h)))

@@ -1,0 +1,106 @@
+"""Optimizer math, gradient compression, data determinism, checkpointing."""
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_pytree, save_pytree
+from repro.data.pipeline import DataConfig, SyntheticTokenDataset
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compression import compress_grads, decompress_grads
+
+
+def test_adamw_first_step_is_signed_lr():
+    """After one step with wd=0, |update| == lr (bias-corrected Adam)."""
+    params = {"w": jnp.ones((4,)) * 2.0}
+    grads = {"w": jnp.array([1.0, -1.0, 2.0, -2.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=1e9)
+    st_ = adamw_init(params)
+    p2, st2, m = adamw_update(params, grads, st_, cfg)
+    upd = np.asarray(params["w"] - p2["w"])
+    np.testing.assert_allclose(np.abs(upd), 0.1, rtol=1e-5)
+    np.testing.assert_allclose(np.sign(upd), np.sign(np.asarray(grads["w"])))
+
+
+def test_adamw_grad_clipping():
+    params = {"w": jnp.zeros((3,))}
+    grads = {"w": jnp.array([30.0, 40.0, 0.0])}   # norm 50
+    cfg = AdamWConfig(grad_clip=1.0)
+    _, _, m = adamw_update(params, grads, adamw_init(params), cfg)
+    assert abs(float(m["grad_norm"]) - 50.0) < 1e-3
+
+
+@given(scale=st.floats(1e-4, 1e3), seed=st.integers(0, 10_000))
+@settings(deadline=None, max_examples=25)
+def test_int8_ef_compression_error_is_bounded(scale, seed):
+    g = {"w": jax.random.normal(jax.random.key(seed), (300,)) * scale}
+    wire, err = compress_grads(g, "int8_ef")
+    deq = decompress_grads(wire, "int8_ef", like=g)
+    # per-block absmax int8: |error| <= scale_block/2 ~ max/254
+    bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= bound + 1e-6
+    # error feedback: the residual carried equals the quantization error
+    np.testing.assert_allclose(np.asarray(err["w"]), np.asarray(g["w"] - deq["w"]), atol=1e-6)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Accumulated EF-compressed grads converge to accumulated true grads."""
+    key = jax.random.key(0)
+    g_true = jax.random.normal(key, (64,)) * 0.01
+    err = None
+    total = jnp.zeros(64)
+    for _ in range(50):
+        wire, err = compress_grads({"w": g_true}, "int8_ef", err)
+        total = total + decompress_grads(wire, "int8_ef", like={"w": g_true})["w"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g_true), atol=1e-4)
+
+
+def test_data_determinism_and_host_sharding():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8)
+    ds1 = SyntheticTokenDataset(cfg)
+    ds2 = SyntheticTokenDataset(cfg)
+    np.testing.assert_array_equal(ds1.batch_at(7)["tokens"], ds2.batch_at(7)["tokens"])
+    # two hosts produce different shards, same shapes
+    a = SyntheticTokenDataset(DataConfig(1000, 32, 8, n_hosts=2, host_id=0)).batch_at(3)
+    b = SyntheticTokenDataset(DataConfig(1000, 32, 8, n_hosts=2, host_id=1)).batch_at(3)
+    assert a["tokens"].shape == (4, 33)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_zipf_distribution_is_skewed():
+    ds = SyntheticTokenDataset(DataConfig(vocab=5000, seq_len=256, global_batch=8))
+    toks = ds.batch_at(0)["tokens"]
+    assert (toks < 50).mean() > 0.2    # head-heavy
+    assert toks.max() < 5000 and toks.min() >= 0
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    tree = {"a": {"w": jnp.arange(6.0).reshape(2, 3)}, "step": jnp.int32(3),
+            "list": [jnp.ones(2), jnp.zeros(3)]}
+    d = str(tmp_path)
+    save_pytree(tree, d, 10)
+    back = restore_pytree(tree, d, 10)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert latest_step(d) == 10
+
+    mgr = CheckpointManager(d, keep=2, async_write=True)
+    for s in (20, 30, 40):
+        mgr.save(tree, s)
+    mgr.wait()
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(d) if p.startswith("step_"))
+    assert steps == [30, 40]
+    restored, step = mgr.restore_latest(tree)
+    assert step == 40 and restored is not None
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A leftover .tmp dir must never be picked up as a checkpoint."""
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_5.tmp"))
+    save_pytree({"w": jnp.ones(3)}, d, 4)
+    assert latest_step(d) == 4

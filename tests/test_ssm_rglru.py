@@ -1,0 +1,75 @@
+"""SSD + RG-LRU model-layer invariants: chunked == sequential, decode-step
+chain == full scan (the cache-correctness property for SSM/hybrid serving)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.rglru import rglru_scan, rglru_step
+from repro.models.ssm import ssd_chunked, ssd_sequential, ssd_step
+
+
+def _ssd_inputs(B=2, S=64, H=3, P=16, N=32, seed=0):
+    x = jax.random.normal(jax.random.key(seed), (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(seed + 1), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(seed + 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.key(seed + 3), (B, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.key(seed + 4), (B, S, N)) * 0.3
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64, 128])
+def test_ssd_chunked_equals_sequential(chunk):
+    x, dt, A, Bm, Cm = _ssd_inputs()
+    yc, hc = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    ys, hs = ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(ys), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hs), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_decode_chain_matches_scan():
+    x, dt, A, Bm, Cm = _ssd_inputs(B=1, S=24)
+    ys, hT = ssd_sequential(x, dt, A, Bm, Cm)
+    state = jnp.zeros_like(hT)
+    outs = []
+    for t in range(x.shape[1]):
+        y, state = ssd_step(state, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        outs.append(y)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ys), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(hT), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_carried_state_across_segments():
+    """prefill(S) == prefill(S/2) + continue(S/2) — the serving property."""
+    x, dt, A, Bm, Cm = _ssd_inputs(B=1, S=64)
+    y_full, h_full = ssd_chunked(x, dt, A, Bm, Cm, 16)
+    y1, h1 = ssd_chunked(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32], 16)
+    y2, h2 = ssd_chunked(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:], 16, init_state=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_scan_matches_step_chain():
+    B, S, D = 2, 40, 16
+    x = jax.random.normal(jax.random.key(0), (B, S, D))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (B, S, D)) * 2)
+    h, h_last = rglru_scan(x, a)
+    state = jnp.zeros((B, D))
+    for t in range(S):
+        bt = jnp.sqrt(jnp.maximum(1 - a[:, t] ** 2, 1e-12)) * x[:, t]
+        state = a[:, t] * state + bt
+    np.testing.assert_allclose(np.asarray(h[:, -1]), np.asarray(state), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(state), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_init_state_continuation():
+    B, S, D = 1, 32, 8
+    x = jax.random.normal(jax.random.key(0), (B, S, D))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (B, S, D)))
+    h_full, _ = rglru_scan(x, a)
+    h1, s1 = rglru_scan(x[:, :16], a[:, :16])
+    h2, _ = rglru_scan(x[:, 16:], a[:, 16:], init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(h_full), atol=1e-5, rtol=1e-5)
