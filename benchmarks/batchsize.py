@@ -1,20 +1,24 @@
 """Paper §2.2 batch-size configuration: doubling search for the inference
-batch size that maximizes decode throughput (measured, reduced configs)."""
+batch size that maximizes decode throughput (measured, reduced configs).
+The search probes run through the shared ``BenchmarkRunner``, so all batch
+sizes of an arch reuse one model build."""
 from __future__ import annotations
 
 import json
 
-from benchmarks.common import emit, results_path
+from benchmarks.common import emit, make_runner, results_path
 from repro.core.batchsearch import search_batch_size
 from repro.core.suite import build_suite
 
 ARCHS = ["gemma-2b", "mamba2-2.7b", "mixtral-8x7b"]
 
 
-def main(fast: bool = False) -> None:
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
     out = {}
     for b in build_suite(tasks=("infer_decode",), archs=ARCHS[: 1 if fast else 3]):
-        best, hist = search_batch_size(b, seq=32, max_batch=16 if fast else 32)
+        best, hist = search_batch_size(b, seq=32, max_batch=16 if fast else 32,
+                                       runner=runner)
         out[b.name] = {"best_batch": best, "history": hist}
         last = hist[-1] if hist else {}
         emit(f"batchsize/{b.name}", last.get("median_us", 0.0),

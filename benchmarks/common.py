@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
-import sys
 from typing import Any, Dict, List, Optional
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -24,23 +22,21 @@ def load_dryrun(multi_pod: bool = False) -> Optional[List[Dict[str, Any]]]:
     return None
 
 
+def make_runner(runs: int = 3, **kw):
+    """The benchmark harness's shared BenchmarkRunner, persisting RunResults
+    to ``results/store`` (runs.jsonl + latest.json)."""
+    from repro.runner import BenchmarkRunner, ResultStore
+    return BenchmarkRunner(store=ResultStore(results_path("store")),
+                           runs=runs, **kw)
+
+
 def run_dryrun_subprocess(arch: str, shape: str, *, multi_pod: bool = False,
                           rules: Optional[dict] = None,
                           timeout: int = 1200) -> Dict[str, Any]:
     """Dry-run in a subprocess so THIS process keeps 1 CPU device."""
-    out = results_path(f"_cell_{arch}_{shape}{'_mp' if multi_pod else ''}.json")
-    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--json", out]
-    if multi_pod:
-        cmd.append("--multi-pod")
-    if rules:
-        cmd += ["--rules", json.dumps(rules)]
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-    r = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=timeout)
-    if r.returncode != 0:
-        raise RuntimeError(f"dryrun {arch}x{shape} failed:\n{r.stderr[-2000:]}")
-    with open(out) as f:
-        return json.load(f)[0]
+    from repro.runner import dryrun_cell_subprocess
+    return dryrun_cell_subprocess(arch, shape, multi_pod=multi_pod,
+                                  rules=rules, timeout=timeout)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -1,20 +1,23 @@
 """Paper Figs. 1-2 + Table 2: execution-time breakdown per benchmark and per
-domain, derived from the dry-run roofline terms (compute / HBM / ICI)."""
+domain, derived from the dry-run roofline terms (compute / HBM / ICI).
+Fallback cells compile through the runner's cached dry-run path, so cells
+shared with fig5/roofline cost one subprocess total."""
 from __future__ import annotations
 
 import json
 
-from benchmarks.common import emit, load_dryrun, results_path, run_dryrun_subprocess
+from benchmarks.common import emit, load_dryrun, make_runner, results_path
 from repro.core.breakdown import breakdown_rows, domain_table
 
 FALLBACK_CELLS = [("gemma-2b", "train_4k"), ("mamba2-2.7b", "train_4k"),
                   ("gemma-2b", "decode_32k")]
 
 
-def main(fast: bool = False) -> None:
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
     results = load_dryrun()
     if results is None:
-        results = [run_dryrun_subprocess(a, s) for a, s in FALLBACK_CELLS[: 2 if fast else 3]]
+        results = runner.dryrun_cells(FALLBACK_CELLS[: 2 if fast else 3])
     rows = breakdown_rows(results)
     for r in rows:
         emit(f"fig12/{r['arch']}/{r['shape']}", 0.0,

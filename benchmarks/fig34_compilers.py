@@ -1,28 +1,37 @@
 """Paper Figs. 3-4: execution-mode ("compiler") comparison — eager vs jit
-variants, reporting time / host-mem / device-mem ratios (T/CM/GM)."""
+variants, reporting time / host-mem / device-mem ratios (T/CM/GM).
+
+One ``ScenarioMatrix`` over arch x mode drives the whole figure; the
+runner shares each arch's build across its eager/jit/jit_donated cells."""
 from __future__ import annotations
 
 import json
 
-from benchmarks.common import emit, results_path
-from repro.core.compilers import compare_modes, ratio_table
-from repro.core.suite import build_suite
+from benchmarks.common import emit, make_runner, results_path
+from repro.core.compilers import ratio_table
+from repro.runner.scenario import ScenarioMatrix
 
 ARCHS_FULL = ["gemma-2b", "mixtral-8x7b", "mamba2-2.7b", "recurrentgemma-9b",
               "internlm2-20b", "whisper-large-v3"]
 ARCHS_FAST = ["gemma-2b", "mamba2-2.7b"]
 
 
-def main(fast: bool = False) -> None:
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
     archs = ARCHS_FAST if fast else ARCHS_FULL
+    modes = ("eager", "jit", "jit_donated") if fast else \
+            ("eager", "jit", "jit_donated", "jit_unrolled", "jit_noremat")
+    matrix = ScenarioMatrix(archs=archs, tasks=("train",), batches=(2,),
+                            seqs=(48,), modes=modes)
     results = {}
-    for b in build_suite(tasks=("train",), archs=archs):
-        modes = ("eager", "jit", "jit_donated") if fast else \
-                ("eager", "jit", "jit_donated", "jit_unrolled", "jit_noremat")
-        results[b.name] = compare_modes(b, batch=2, seq=48, runs=3, modes=modes)
-        for mode, m in results[b.name].items():
-            emit(f"fig34/{b.name}/{mode}", m.median_us,
-                 f"host_peak={m.host_peak_bytes};compile_us={m.compile_us:.0f}")
+    for rr in runner.run_matrix(matrix, runs=3):
+        if rr.status != "ok":
+            emit(f"fig34/{rr.bench}/{rr.mode}", 0.0,
+                 f"status={rr.status};error={(rr.error or '')[:60]}")
+            continue
+        results.setdefault(rr.bench, {})[rr.mode] = rr
+        emit(f"fig34/{rr.bench}/{rr.mode}", rr.median_us,
+             f"host_peak={rr.host_peak_bytes};compile_us={rr.compile_us:.0f}")
     rows = ratio_table(results, base="jit")
     # time_ratio for the eager rows is eager/jit — i.e. the jit speedup
     speedups = [r["time_ratio"] for r in rows if r["mode"] == "eager" and r["time_ratio"]]

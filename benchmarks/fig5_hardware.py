@@ -4,17 +4,18 @@ from __future__ import annotations
 
 import json
 
-from benchmarks.common import emit, load_dryrun, results_path, run_dryrun_subprocess
+from benchmarks.common import emit, load_dryrun, make_runner, results_path
 from repro.core.hardware import HW_PROFILES
 from repro.core.hwcompare import hardware_ratio_table
 
 FALLBACK_CELLS = [("gemma-2b", "train_4k"), ("mamba2-2.7b", "train_4k")]
 
 
-def main(fast: bool = False) -> None:
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
     results = load_dryrun()
     if results is None:
-        results = [run_dryrun_subprocess(a, s) for a, s in FALLBACK_CELLS]
+        results = runner.dryrun_cells(FALLBACK_CELLS)
     for pair in [("a100_like", "mi210_like"), ("tpu_v5e", "tpu_v4")]:
         rows = hardware_ratio_table(results, *pair)
         wins = {pair[0]: 0, pair[1]: 0}

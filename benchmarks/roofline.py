@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import json
 
-from benchmarks.common import emit, load_dryrun, results_path, run_dryrun_subprocess
+from benchmarks.common import emit, load_dryrun, make_runner, results_path
 
 FALLBACK_CELLS = [("gemma-2b", "train_4k")]
 
@@ -16,10 +16,11 @@ NOTES = {
 }
 
 
-def main(fast: bool = False) -> None:
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
     results = load_dryrun()
     if results is None:
-        results = [run_dryrun_subprocess(a, s) for a, s in FALLBACK_CELLS]
+        results = runner.dryrun_cells(FALLBACK_CELLS)
     rows = []
     for r in results:
         if "roofline" not in r:

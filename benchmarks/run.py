@@ -1,6 +1,19 @@
-"""Benchmark harness entry point: one function per paper table/figure.
+"""Benchmark harness entry point: one function per paper table/figure, all
+executed through the unified ``repro.runner.BenchmarkRunner``.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+        [--filter RE ...] [--exclude RE ...] [--isolate]
+
+One ``BenchmarkRunner`` + ``ResultStore`` (``results/store``) is shared by
+every table: arch builds, compiled executables, and dry-run cells are
+reused across figures, and every measurement lands as a versioned
+``RunResult`` (schema documented in ``repro/runner/results.py``) in the
+JSONL run log with a latest-pointer for ``scripts/report_tables.py``.
+
+``--filter`` / ``--exclude`` are regexes over scenario names
+("arch/task/bN/sN/dtype/mode"), applied to the measured-suite tables —
+the torchbench driver's model-selection semantics.  ``--isolate`` runs
+each scenario in its own subprocess (fault containment for crashy cells).
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 """
@@ -16,10 +29,24 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduced sweep for CI")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--filter", action="append", default=[],
+                    help="regex over scenario names; keep matches")
+    ap.add_argument("--exclude", action="append", default=[],
+                    help="regex over scenario names; drop matches")
+    ap.add_argument("--isolate", action="store_true",
+                    help="one subprocess per scenario (fault containment)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="recompile cached dry-run cells (after config/model changes)")
     args = ap.parse_args(argv)
 
     from benchmarks import (batchsize, fig5_hardware, fig12_breakdown,
-                            fig34_compilers, roofline, table1_suite, table45_ci)
+                            fig34_compilers, roofline, runner_bench,
+                            table1_suite, table45_ci)
+    from benchmarks.common import make_runner
+    runner = make_runner(isolate=args.isolate)
+    runner.default_filter = tuple(args.filter)
+    runner.default_exclude = tuple(args.exclude)
+    runner.dryrun_refresh = args.refresh
     tables = {
         "table1_suite": table1_suite.main,         # Table 1 + coverage (§2.3)
         "fig12_breakdown": fig12_breakdown.main,   # Figs 1-2 + Table 2
@@ -28,6 +55,7 @@ def main(argv=None) -> int:
         "table45_ci": table45_ci.main,             # §4.2, Tables 4-5
         "batchsize": batchsize.main,               # §2.2 batch-size search
         "roofline": roofline.main,                 # §Roofline deliverable
+        "runner_bench": runner_bench.main,         # runner reuse speedup
     }
     failed = 0
     for name, fn in tables.items():
@@ -36,11 +64,12 @@ def main(argv=None) -> int:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            fn(fast=args.fast)
+            fn(fast=args.fast, runner=runner)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failed += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr, flush=True)
+    print(f"# runner stats: {runner.stats.to_dict()}", flush=True)
     return 1 if failed else 0
 
 

@@ -1,0 +1,70 @@
+"""Runner-level benchmark: model/executable reuse vs the seed path.
+
+Workload: a repeated-arch sweep in the shape regression CI produces every
+night — all three tasks of one arch, then the train cell re-measured three
+more times (baseline + injection probes).  The seed path rebuilt the model
+and re-jitted for every measurement; the unified runner shares one arch
+build across tasks and replays cached executables on re-measures.
+
+Emits both wall times and the speedup; numbers land in
+``results/runner_bench.json``."""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit, results_path
+from repro.core.harness import measure
+from repro.core.suite import get_benchmark
+from repro.runner import BenchmarkRunner, Scenario
+
+ARCH = "gemma-2b"
+BATCH, SEQ = 2, 32
+
+
+def _workload(fast: bool):
+    tasks = ("train", "infer_decode") if fast else ("train", "infer_prefill", "infer_decode")
+    sweep = [Scenario(arch=ARCH, task=t, batch=BATCH, seq=SEQ) for t in tasks]
+    probes = [Scenario(arch=ARCH, task="train", batch=BATCH, seq=SEQ)] * (2 if fast else 3)
+    return sweep + probes
+
+
+def seed_path(scenarios, runs: int) -> float:
+    """The pre-runner protocol: fresh build + fresh jit per measurement."""
+    t0 = time.perf_counter()
+    for sc in scenarios:
+        bench = get_benchmark(sc.arch, sc.task)
+        step, args, donate = bench.make(batch=sc.batch, seq=sc.seq)
+        measure(bench.name, step, args, donate, runs=runs)
+    return time.perf_counter() - t0
+
+
+def runner_path(scenarios, runs: int) -> tuple:
+    runner = BenchmarkRunner(runs=runs)
+    t0 = time.perf_counter()
+    for sc in scenarios:
+        rr = runner.run(sc, record=False)
+        if rr.status != "ok":
+            raise RuntimeError(f"{sc.name}: {rr.error}")
+    return time.perf_counter() - t0, runner.stats
+
+
+def main(fast: bool = False, runner=None) -> None:
+    runs = 2 if fast else 3
+    scenarios = _workload(fast)
+    seed_s = seed_path(scenarios, runs)
+    runner_s, stats = runner_path(scenarios, runs)
+    speedup = seed_s / runner_s if runner_s else 0.0
+    emit("runner_bench/seed_path_s", seed_s * 1e6, f"{len(scenarios)}_measurements")
+    emit("runner_bench/runner_path_s", runner_s * 1e6,
+         f"model_builds={stats.model_builds};exec_cache_hits={stats.executable_cache_hits}")
+    emit("runner_bench/reuse_speedup", 0.0, f"{speedup:.2f}x")
+    with open(results_path("runner_bench.json"), "w") as f:
+        json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
+                   "seed_path_s": seed_s, "runner_path_s": runner_s,
+                   "speedup": speedup, "runner_stats": stats.to_dict()},
+                  f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

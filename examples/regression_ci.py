@@ -10,46 +10,55 @@ import tempfile
 sys.path.insert(0, "src")
 
 from repro.core.ci import run_nightly  # noqa: E402
-from repro.core.harness import RegressionHook, measure  # noqa: E402
+from repro.core.harness import RegressionHook  # noqa: E402
 from repro.core.regression import Commit, MetricStore, bisect_commits  # noqa: E402
-from repro.core.suite import build_suite  # noqa: E402
+from repro.runner import BenchmarkRunner, Scenario  # noqa: E402
 
 
 def main() -> int:
     store = MetricStore(tempfile.mktemp(suffix=".json"))
     archs = ["gemma-2b", "mamba2-2.7b"]
+    # one runner for the whole CI day: nights and bisection probes share
+    # cached arch builds and compiled executables
+    runner = BenchmarkRunner(runs=3)
 
     print("== night 0: record baselines ==")
-    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3, update_baseline=True)
+    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3,
+                      update_baseline=True, runner=runner)
     print(f"ran {rep.ran} benchmarks in {rep.wall_s:.1f}s")
 
     print("\n== night 1: a commit slows gemma-2b training by ~50ms/step ==")
     hooks = {"gemma-2b/train": RegressionHook(slowdown_s=0.05)}
-    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3, hooks=hooks)
+    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3, hooks=hooks,
+                      runner=runner)
+    print(f"ran {rep.ran} benchmarks in {rep.wall_s:.1f}s (cached executables)")
     for issue in rep.issues:
         print(f"ISSUE: {issue.benchmark} {issue.metric} +{issue.increase:.0%} "
               f"(baseline {issue.baseline:.0f}, observed {issue.observed:.0f})")
     assert any(i.metric == "median_us" for i in rep.issues)
 
     print("\n== bisect the day's 12 commits ==")
-    bench = build_suite(tasks=("train",), archs=["gemma-2b"])[0]
-    step, args, donate = bench.make(batch=2, seq=32)
-    base = store.baseline(bench.name)["median_us"]
+    sc = Scenario(arch="gemma-2b", task="train")
+    base = store.baseline(sc.bench)["median_us"]
 
-    def runner(bad):
+    def commit_runner(bad):
         def run(_name):
             hook = RegressionHook(slowdown_s=0.05) if bad else None
-            return {"median_us": measure(bench.name, step, args, donate,
-                                         runs=2, hook=hook).median_us}
+            return {"median_us": runner.run(sc, runs=2, hook=hook).median_us}
         return run
 
-    commits = [Commit(f"c{i:02d}", i, runner(i >= 8)) for i in range(12)]
+    commits = [Commit(f"c{i:02d}", i, commit_runner(i >= 8)) for i in range(12)]
     trace: list = []
-    culprit = bisect_commits(commits, bench.name, "median_us", base, trace=trace)
+    # classify at half the regression size the nightly detected, so host
+    # noise on shared boxes can't flag a good commit as the culprit
+    inc = max(i.increase for i in rep.issues if i.metric == "median_us")
+    culprit = bisect_commits(commits, sc.bench, "median_us", base,
+                             threshold=max(0.07, inc / 2), trace=trace)
     for t in trace:
         print(" ", t)
     print(f"culprit: {culprit.sha} (found with {len(trace)} measurements of 12 commits)")
     assert culprit.sha == "c08"
+    print(f"runner stats: {runner.stats.to_dict()}")
     return 0
 
 

@@ -1,10 +1,12 @@
 #!/usr/bin/env python
-"""Render the §Roofline / §Dry-run tables from the sweep JSONs (markdown)."""
+"""Render the §Roofline / §Dry-run tables from the sweep JSONs, plus the
+measured-suite table from the BenchmarkRunner's ResultStore (markdown)."""
 import json
 import os
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
 
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
 
@@ -68,11 +70,37 @@ def improvement(base, opt):
     return "\n".join(out)
 
 
+def measured_table():
+    """Latest measured RunResults from the runner's store (results/store)."""
+    from repro.runner.results import ResultStore
+    store = ResultStore(os.path.join(REPO, "results", "store"))
+    rows = [r for r in store.results()
+            if r.status == "ok" and not r.extra.get("derived")]
+    if not rows:
+        return None
+    out = ["### Measured suite — latest BenchmarkRunner results", "",
+           "| scenario | median | p90 | compile | host peak | runs | reused |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.name} | {r.median_us/1e3:.2f} ms | {r.p90_us/1e3:.2f} ms | "
+            f"{r.compile_us/1e3:.0f} ms | {r.host_peak_bytes/1e6:.1f} MB | "
+            f"{r.runs} | {'exec' if r.cache.get('executable_reused') else ('model' if r.cache.get('model_reused') else '—')} |")
+    errs = [r for r in store.results() if r.status == "error"]
+    for r in errs:
+        out.append(f"| {r.name} | ERROR: {(r.error or '')[:60]} | | | | | |")
+    out.append("")
+    return "\n".join(out)
+
+
 def main():
     base = load("dryrun_single.json")
     opt = load("dryrun_single_opt.json")
     mp = load("dryrun_multi.json")
     parts = []
+    measured = measured_table()
+    if measured:
+        parts.append(measured)
     if base:
         parts.append(table(base, "Baseline roofline — single pod 16x16 (paper-faithful)"))
     if opt:

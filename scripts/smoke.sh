@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# PR smoke gate: tier-1 tests + the runner-driven table1 path end-to-end.
+#
+#     bash scripts/smoke.sh [--fast-only]
+#
+# Fails on the first nonzero exit.  --fast-only skips the pytest tier
+# (useful while iterating on the benchmark harness itself).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--fast-only" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
+
+echo "== runner path: table1_suite --fast =="
+python -m benchmarks.run --fast --only table1_suite
+
+echo "smoke OK"

@@ -24,7 +24,7 @@ import numpy as np
 
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
@@ -59,7 +59,7 @@ def restore_pytree(like, directory: str, step: int, *, process_index: int = 0):
     with open(os.path.join(final, f"manifest_p{process_index}.json")) as f:
         manifest = json.load(f)
     by_name = {e["name"]: e for e in manifest["leaves"]}
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)

@@ -3,33 +3,35 @@
 TorchBench doubles the inference batch size until GPU utilization peaks; the
 analogue here maximizes decode throughput (tokens/s) on the measured path,
 stopping when throughput stops improving or memory fails.
+
+The doubling loop runs through the unified ``BenchmarkRunner``: one arch
+build (model + params) is shared by every batch size probed, so each probe
+pays only for its own cache init and compile.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-import jax
-
-from repro.core.harness import measure
-
 
 def search_batch_size(bench, *, seq: int = 64, start: int = 1, max_batch: int = 64,
-                      runs: int = 3) -> Tuple[int, List[Dict]]:
+                      runs: int = 3, runner=None) -> Tuple[int, List[Dict]]:
+    from repro.runner.runner import BenchmarkRunner
+    from repro.runner.scenario import Scenario
+    runner = runner or BenchmarkRunner(runs=runs)
     best_b, best_tps = start, 0.0
     history = []
     b = start
     while b <= max_batch:
-        try:
-            step, args, donate = bench.make(batch=b, seq=seq)
-            m = measure(f"{bench.name}/b{b}", step, args, donate, runs=runs)
-            tps = b / (m.median_us / 1e6)
-            history.append({"batch": b, "median_us": m.median_us, "items_per_s": tps})
-            if tps > best_tps * 1.05:
-                best_tps, best_b = tps, b
-            elif tps < best_tps * 0.95:
-                break   # throughput declining: past the knee
-        except (RuntimeError, MemoryError) as e:
-            history.append({"batch": b, "error": str(e)[:100]})
+        sc = Scenario(arch=bench.arch, task=bench.task, batch=b, seq=seq)
+        rr = runner.run(sc, runs=runs)
+        if rr.status != "ok":
+            history.append({"batch": b, "error": (rr.error or "")[:100]})
             break
+        tps = b / (rr.median_us / 1e6)
+        history.append({"batch": b, "median_us": rr.median_us, "items_per_s": tps})
+        if tps > best_tps * 1.05:
+            best_tps, best_b = tps, b
+        elif tps < best_tps * 0.95:
+            break   # throughput declining: past the knee
         b *= 2
     return best_b, history

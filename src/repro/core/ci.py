@@ -1,17 +1,22 @@
 """Nightly CI driver (paper §4.2.1): run the measured suite in all four
 configurations (train/inference x with/without donation as the CPU/GPU
 proxy), compare against the baseline store, file issues, and bisect.
+
+Execution goes through the unified ``BenchmarkRunner``: pass a shared
+runner to reuse arch builds and compiled executables across nights (the
+per-night wall time drops to pure measurement after night 0).
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 from typing import Any, Dict, List, Optional
 
-from repro.core.harness import RegressionHook, measure
+from repro.configs import ARCHS
+from repro.core.harness import RegressionHook
 from repro.core.regression import Issue, MetricStore, detect
-from repro.core.suite import Benchmark, build_suite
+from repro.runner.runner import BenchmarkRunner
+from repro.runner.scenario import ScenarioMatrix
 
 
 @dataclasses.dataclass
@@ -28,19 +33,24 @@ class NightlyReport:
 def run_nightly(store: MetricStore, *, archs: Optional[List[str]] = None,
                 tasks=("train", "infer_decode"), runs: int = 5,
                 update_baseline: bool = False,
-                hooks: Optional[Dict[str, RegressionHook]] = None) -> NightlyReport:
+                hooks: Optional[Dict[str, RegressionHook]] = None,
+                runner: Optional[BenchmarkRunner] = None) -> NightlyReport:
     t0 = time.perf_counter()
     issues: List[Issue] = []
-    benches = build_suite(tasks=tasks, archs=archs)
-    for b in benches:
-        step, args, donate = b.make()
-        m = measure(b.name, step, args, donate, runs=runs,
-                    hook=(hooks or {}).get(b.name))
-        obs = {"median_us": m.median_us, "host_peak_bytes": m.host_peak_bytes,
-               "device_bytes_delta": m.device_bytes_delta}
+    runner = runner or BenchmarkRunner(runs=runs)
+    matrix = ScenarioMatrix(archs=sorted(archs or ARCHS), tasks=tasks)
+    ran = 0
+    for rr in runner.run_matrix(matrix, hooks=hooks, runs=runs):
+        ran += 1
+        if rr.status != "ok":
+            issues.append(Issue(benchmark=rr.bench, metric="status",
+                                baseline=0.0, observed=0.0, increase=0.0,
+                                culprit=rr.error))
+            continue
+        obs = rr.metrics()
         if update_baseline:
-            store.update(b.name, obs)
+            store.update(rr.bench, obs)
         else:
-            issues.extend(detect(store, b.name, obs))
-    return NightlyReport(ran=len(benches), issues=issues,
+            issues.extend(detect(store, rr.bench, obs))
+    return NightlyReport(ran=ran, issues=issues,
                          wall_s=time.perf_counter() - t0)

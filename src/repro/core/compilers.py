@@ -1,7 +1,7 @@
 """Execution-mode ("compiler backend") comparison — paper §3.2 analogue.
 
 TorchBench compares PyTorch eager vs TorchInductor on time / CPU-mem /
-GPU-mem.  The JAX stack's execution modes:
+GPU-mem.  The JAX stack's execution modes (see ``repro.runner.scenario``):
 
   eager          op-by-op dispatch (jax.disable_jit) — PyTorch-eager analogue
   jit            whole-step XLA compilation — the TorchInductor analogue
@@ -9,87 +9,50 @@ GPU-mem.  The JAX stack's execution modes:
   jit_unrolled   layer scan unrolled (bigger program, more fusion scope)
   jit_noremat    no activation rematerialization (time/memory trade)
 
-Reported per mode: median step time, host peak bytes, device bytes — the
-same T/CM/GM triple as the paper's Figs. 3-4.
+Mode execution lives in the unified ``BenchmarkRunner`` (one arch build is
+shared by eager/jit/jit_donated; the cfg-override modes build their own
+variant).  This module keeps the comparison front-end: ``compare_modes``
+for a single benchmark and ``ratio_table`` for the paper's T/CM/GM ratios.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
+from repro.core.harness import Measurement
+from repro.runner.scenario import MODES, Scenario
 
-from repro.core.harness import Measurement, measure
-
-MODES = ("eager", "jit", "jit_donated", "jit_unrolled", "jit_noremat")
+__all__ = ["MODES", "compare_modes", "ratio_table"]
 
 
 def compare_modes(bench, *, batch: int = 2, seq: int = 64, runs: int = 5,
-                  modes: Tuple[str, ...] = MODES) -> Dict[str, Measurement]:
+                  modes: Tuple[str, ...] = MODES,
+                  runner=None) -> Dict[str, Measurement]:
+    """Measure one suite benchmark under each execution mode."""
+    from repro.runner.runner import BenchmarkRunner
+    runner = runner or BenchmarkRunner(runs=runs)
     out: Dict[str, Measurement] = {}
     for mode in modes:
-        if mode == "eager":
-            step, args, donate = bench.make(batch=batch, seq=seq)
-            import time as _t, numpy as np, tracemalloc
-            with jax.disable_jit():
-                jax.block_until_ready(step(*args))   # warm
-                tracemalloc.start()
-                times = []
-                for _ in range(max(2, runs // 2)):
-                    t0 = _t.perf_counter()
-                    jax.block_until_ready(step(*args))
-                    times.append((_t.perf_counter() - t0) * 1e6)
-                _, peak = tracemalloc.get_traced_memory()
-                tracemalloc.stop()
-            arr = np.array(times)
-            out[mode] = Measurement(
-                name=f"{bench.name}/{mode}", median_us=float(np.median(arr)),
-                mean_us=float(arr.mean()), p10_us=float(arr.min()),
-                p90_us=float(arr.max()), compile_us=0.0,
-                host_peak_bytes=int(peak), device_bytes_delta=0, runs=len(times))
-            continue
-
-        overrides: Dict[str, Any] = {}
-        if mode == "jit_unrolled":
-            overrides["scan_layers"] = False
-        if mode == "jit_noremat":
-            overrides["remat"] = "none"
-        if overrides:
-            bench2 = _with_cfg(bench, overrides)
-        else:
-            bench2 = bench
-        step, args, donate = bench2.make(batch=batch, seq=seq)
-        d = donate if mode == "jit_donated" else ()
-        out[mode] = measure(f"{bench.name}/{mode}", step, args, d, runs=runs)
+        sc = Scenario(arch=bench.arch, task=bench.task, batch=batch, seq=seq,
+                      mode=mode)
+        rr = runner.run(sc, runs=runs)
+        if rr.status != "ok":
+            raise RuntimeError(f"{sc.name}: {rr.error}")
+        out[mode] = Measurement(
+            name=f"{bench.name}/{mode}", median_us=rr.median_us,
+            mean_us=rr.mean_us, p10_us=rr.p10_us, p90_us=rr.p90_us,
+            compile_us=rr.compile_us, host_peak_bytes=rr.host_peak_bytes,
+            device_bytes_delta=rr.device_bytes_delta, runs=rr.runs)
     return out
 
 
-def _with_cfg(bench, overrides: Dict[str, Any]):
-    """Clone a Benchmark whose make() applies reduced-config overrides."""
-    import copy
-    from repro.configs import get_arch, register_arch
-    import dataclasses as dc
-    b2 = copy.copy(bench)
-    orig_make = type(bench).make
-
-    def make(self=b2, *, batch=2, seq=64):
-        cfg = get_arch(bench.arch).reduced(**overrides)
-        # temporarily register a variant so Benchmark.make picks it up
-        name = cfg.name
-        from repro.configs.base import ARCHS
-        saved = ARCHS.get(bench.arch)
-        try:
-            ARCHS[bench.arch] = dc.replace(cfg, name=bench.arch)
-            return orig_make(self, batch=batch, seq=seq)
-        finally:
-            ARCHS[bench.arch] = saved
-    b2.make = make
-    return b2
-
-
-def ratio_table(results: Dict[str, Dict[str, Measurement]], base: str = "jit",
+def ratio_table(results: Dict[str, Dict[str, Any]], base: str = "jit",
                 rel: str = "eager") -> List[Dict[str, Any]]:
-    """Per-benchmark T/CM ratios (mode / base), like the paper's <1 / >1 bars."""
+    """Per-benchmark T/CM ratios (mode / base), like the paper's <1 / >1 bars.
+
+    ``results`` maps benchmark -> mode -> any object with ``median_us`` /
+    ``host_peak_bytes`` / ``device_bytes_delta`` attributes (Measurement or
+    RunResult).
+    """
     rows = []
     for bname, modes in results.items():
         if base not in modes:

@@ -58,9 +58,13 @@ def stablehlo_ops(lowered_text: str) -> Set[str]:
     return {m.group(1).split(".", 1)[1] for m in _STABLEHLO_OP_RE.finditer(lowered_text)}
 
 
-def benchmark_surfaces(bench, *, batch: int = 2, seq: int = 32) -> Tuple[Set[str], Set[str]]:
-    """-> (jaxpr primitive set, stablehlo op set) for a suite Benchmark."""
-    step, args, _donate = bench.make(batch=batch, seq=seq)
+def benchmark_surfaces(bench, *, batch: int = 2, seq: int = 32,
+                       built=None) -> Tuple[Set[str], Set[str]]:
+    """-> (jaxpr primitive set, stablehlo op set) for a suite Benchmark.
+
+    ``built`` takes a cached arch build (``suite.Built``) so a runner-driven
+    report never re-initialises params just to trace the surface."""
+    step, args, _donate = bench.make(batch=batch, seq=seq, built=built)
     prims = jaxpr_primitives(step, *args)
     lowered = jax.jit(step).lower(*args)
     ops = stablehlo_ops(lowered.as_text())
@@ -68,14 +72,15 @@ def benchmark_surfaces(bench, *, batch: int = 2, seq: int = 32) -> Tuple[Set[str
 
 
 def coverage_report(benches: List, *, baseline_archs: Iterable[str] = ("gemma-2b",),
-                    batch: int = 2, seq: int = 32) -> Dict[str, Any]:
+                    batch: int = 2, seq: int = 32, runner=None) -> Dict[str, Any]:
     per: Dict[str, Dict[str, Any]] = {}
     union_prims: Set[str] = set()
     union_ops: Set[str] = set()
     base_prims: Set[str] = set()
     base_ops: Set[str] = set()
     for b in benches:
-        prims, ops = benchmark_surfaces(b, batch=batch, seq=seq)
+        built = runner.built_for(b.arch) if runner is not None else None
+        prims, ops = benchmark_surfaces(b, batch=batch, seq=seq, built=built)
         per[b.name] = {"n_primitives": len(prims), "n_stablehlo_ops": len(ops),
                        "primitives": sorted(prims), "stablehlo_ops": sorted(ops)}
         union_prims |= prims

@@ -63,23 +63,82 @@ class RegressionHook:
             self._leaked.append(jnp.zeros(self.leak_bytes // 4, jnp.float32).block_until_ready())
 
 
+def measure_eager(name: str, step_fn: Callable, args: Tuple, *,
+                  runs: int = 3,
+                  hook: Optional[RegressionHook] = None) -> Measurement:
+    """Op-by-op dispatch timing (``jax.disable_jit``) — the eager analogue of
+    ``measure`` for the compiler-mode comparison.  No compile, no donation."""
+    with jax.disable_jit():
+        jax.block_until_ready(step_fn(*args))   # warm
+        tracemalloc.start()
+        times = []
+        for _ in range(max(2, runs)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step_fn(*args))
+            dt = (time.perf_counter() - t0) * 1e6
+            if hook is not None:
+                hook.fire()
+                dt += (hook.slowdown_s * 1e6)
+            times.append(dt)
+        _, host_peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+    arr = np.array(times)
+    return Measurement(
+        name=name, median_us=float(np.median(arr)), mean_us=float(arr.mean()),
+        p10_us=float(arr.min()), p90_us=float(arr.max()), compile_us=0.0,
+        host_peak_bytes=int(host_peak), device_bytes_delta=0, runs=len(times))
+
+
+def prepare(step_fn: Callable, donate: Tuple[int, ...] = ()) -> Callable:
+    """Jit a step with real buffer donation (suite convention: donated state
+    comes back as an element of a 2-tuple output, see ``_thread``)."""
+    if donate:
+        return jax.jit(step_fn, donate_argnums=donate)
+    return jax.jit(step_fn)
+
+
+def _thread(out: Any, cur_args: Tuple, donate: Tuple[int, ...]) -> Tuple:
+    """Thread a step's output state back into its (donated) argument slot.
+
+    Suite convention: train steps are ``(state, batch) -> (state, metrics)``
+    with ``donate == (0,)``; serving steps are ``(params, toks, cache) ->
+    (logits, cache)`` with ``donate == (2,)``.  With donation active the old
+    buffers are invalidated, so every subsequent call MUST use the threaded
+    output — including the first call after compilation.
+    """
+    if donate == (0,) and isinstance(out, tuple) and len(out) == 2:
+        return (out[0],) + cur_args[1:]
+    if donate == (2,) and isinstance(out, tuple) and len(out) == 2:
+        return cur_args[:2] + (out[1],)
+    return cur_args
+
+
 def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] = (),
             *, runs: int = 10, warmup: int = 1,
-            hook: Optional[RegressionHook] = None) -> Measurement:
-    """Paper protocol: median-of-N timing of the jitted computation phase."""
+            hook: Optional[RegressionHook] = None,
+            jitted: Optional[Callable] = None,
+            final_args: Optional[list] = None) -> Measurement:
+    """Paper protocol: median-of-N timing of the jitted computation phase.
+
+    ``jitted`` lets a caller (the BenchmarkRunner) reuse an already-compiled
+    executable; ``final_args`` (a mutable list) receives the threaded
+    steady-state arguments so the caller can keep them valid across calls
+    when buffers are donated.
+    """
     gc.collect()
     dev0 = _live_device_bytes()
-    jitted = jax.jit(step_fn) if not donate else jax.jit(step_fn)
+    if jitted is None:
+        jitted = prepare(step_fn, donate)
     # compile (excluded from the measured region, reported separately)
     t0 = time.perf_counter()
     out = jitted(*args)
     jax.block_until_ready(out)
     compile_us = (time.perf_counter() - t0) * 1e6
-
     # donation-aware steady state: thread state through when donated
+    cur_args = _thread(out, args, donate)
+
     tracemalloc.start()
     times = []
-    cur_args = args
     for i in range(warmup + runs):
         t0 = time.perf_counter()
         out = jitted(*cur_args)
@@ -90,13 +149,11 @@ def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] =
             dt += (hook.slowdown_s * 1e6)
         if i >= warmup:
             times.append(dt)
-        # thread outputs back in for stateful steps (train: state, serve: cache)
-        if donate == (0,) and isinstance(out, tuple) and len(out) == 2:
-            cur_args = (out[0],) + args[1:]
-        elif donate == (2,) and isinstance(out, tuple) and len(out) == 2:
-            cur_args = args[:2] + (out[1],)
+        cur_args = _thread(out, cur_args, donate)
     _, host_peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
+    if final_args is not None:
+        final_args.append(cur_args)
     dev1 = _live_device_bytes()
     arr = np.array(times)
     return Measurement(

@@ -36,7 +36,11 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _OP_CALL_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
 _COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+# the terse dump style (xla pass dumps): "region_0.36 {" / "ENTRY main.497_spmd {"
+_COMP_START_TERSE_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\{$")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
+# terse operand lists carry bare names ("dot(dynamic-slice.5, collective-permute)")
+_BARE_OPERAND_RE = re.compile(r"(?<![\w.\-])([A-Za-z_][\w\-]*(?:\.\d+)?)")
 _CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
@@ -146,6 +150,16 @@ class _Module:
                         self.params[cur][pm.group(1)] = pm.group(2)
                     if m.group(1):
                         self.entry = cur
+                    continue
+                # terse style: no signature — parameter types come from the
+                # "name = TYPE parameter(N)" instructions inside the body
+                m = _COMP_START_TERSE_RE.match(line.strip())
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    self.params[cur] = {}
+                    if m.group(1):
+                        self.entry = cur
                 continue
             if line.strip() == "}":
                 cur = None
@@ -164,7 +178,11 @@ class _Module:
                 op = om.group(1)
                 rest = rhs[om.end():]
                 # operands run until the matching close paren; attrs follow.
-                operands = _OPERAND_RE.findall(rest.split("), ")[0] if ")" in rest else rest)
+                seg = rest.split("), ")[0] if ")" in rest else rest
+                operands = _OPERAND_RE.findall(seg)
+                if not operands:
+                    # terse style: bare instruction names, no '%' sigil
+                    operands = _BARE_OPERAND_RE.findall(seg.split(")")[0])
                 self.computations[cur].append(_Instr(name, type_str, op, rest, operands))
 
     # ---- symbol table ----

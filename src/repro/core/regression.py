@@ -2,8 +2,12 @@
 
 Mirrors the PyTorch-CI integration TorchBench shipped:
 
-* ``MetricStore`` — JSON store of per-benchmark baseline metrics
-  (execution time + host/device memory, in the paper's four configurations).
+* ``MetricStore`` — per-benchmark baseline metrics (execution time +
+  host/device memory, in the paper's four configurations).  A thin view
+  over ``repro.runner.results.ResultStore``: the baseline map keeps its
+  historical single-JSON format (the store's latest pointer) and every
+  ``update`` is also appended to the sibling ``*.jsonl`` run log, so
+  baseline history is replayable.
 * ``detect`` — flags any benchmark whose metric exceeds baseline by the
   paper's 7% threshold; emits a structured "GitHub issue" record.
 * ``bisect_commits`` — the paper's nightly strategy: check only the nightly
@@ -14,8 +18,6 @@ Mirrors the PyTorch-CI integration TorchBench shipped:
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 THRESHOLD = 0.07   # the paper's 7%
@@ -36,23 +38,35 @@ class Issue:
         return dataclasses.asdict(self)
 
 
+_NON_METRIC_KEYS = ("name", "ts", "schema")
+
+
 class MetricStore:
     def __init__(self, path: str):
+        from repro.runner.results import ResultStore
         self.path = path
-        self.data: Dict[str, Dict[str, float]] = {}
-        if os.path.exists(path):
-            with open(path) as f:
-                self.data = json.load(f)
+        self._store = ResultStore(path)
+
+    @property
+    def data(self) -> Dict[str, Dict[str, float]]:
+        return {name: self._metrics(rec)
+                for name, rec in self._store.latest.items()}
+
+    @staticmethod
+    def _metrics(rec: Dict[str, Any]) -> Dict[str, float]:
+        return {k: v for k, v in rec.items() if k not in _NON_METRIC_KEYS}
 
     def update(self, benchmark: str, metrics: Dict[str, float]) -> None:
-        self.data[benchmark] = {k: float(v) for k, v in metrics.items()}
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.data, f, indent=1)
-        os.replace(tmp, self.path)
+        self._store.append({"name": benchmark,
+                            **{k: float(v) for k, v in metrics.items()}})
 
     def baseline(self, benchmark: str) -> Optional[Dict[str, float]]:
-        return self.data.get(benchmark)
+        rec = self._store.latest.get(benchmark)
+        return None if rec is None else self._metrics(rec)
+
+    def history(self, benchmark: str):
+        """Replay every baseline this benchmark ever recorded (JSONL log)."""
+        return self._store.history(benchmark)
 
 
 def detect(store: MetricStore, benchmark: str, observed: Dict[str, float],

@@ -91,7 +91,7 @@ def model_flops_estimate(cfg, shape) -> float:
     model = build_model(cfg)
     defs = model.param_defs()
     total = 0.0
-    flat, _ = jax.tree.flatten_with_path(defs, is_leaf=lambda d: hasattr(d, "shape"))
+    flat, _ = jax.tree_util.tree_flatten_with_path(defs, is_leaf=lambda d: hasattr(d, "shape"))
     for path, d in flat:
         n = 1.0
         for s in d.shape:

@@ -39,6 +39,28 @@ DOMAINS = {a: c.domain for a, c in ARCHS.items()}
 
 
 @dataclasses.dataclass
+class Built:
+    """A reusable arch build: config + model + initialised params.
+
+    This is the expensive, task-independent part of ``Benchmark.make`` —
+    the BenchmarkRunner caches one per (arch, config-overrides) and shares
+    it across every task/batch/seq scenario of that arch.
+    """
+    cfg: Any
+    model: Any
+    params: Any
+
+
+def build_arch(arch: str, overrides: Optional[Dict[str, Any]] = None) -> Built:
+    """Build the reduced config, model, and params for one arch."""
+    cfg = get_arch(arch).reduced(**(overrides or {}))
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return Built(cfg=cfg, model=model, params=params)
+
+
+@dataclasses.dataclass
 class Benchmark:
     name: str                 # e.g. "gemma-2b/train"
     arch: str
@@ -46,13 +68,17 @@ class Benchmark:
     domain: str
     criteria: str
 
-    def make(self, *, batch: int = 2, seq: int = 64):
-        """-> (step_fn, args, donate_argnums) on the reduced config."""
-        cfg = get_arch(self.arch).reduced()
-        key = jax.random.key(0)
-        from repro.models import build_model
-        model = build_model(cfg)
-        params = model.init(key)
+    def make(self, *, batch: int = 2, seq: int = 64,
+             built: Optional[Built] = None,
+             overrides: Optional[Dict[str, Any]] = None):
+        """-> (step_fn, args, donate_argnums) on the reduced config.
+
+        ``built`` lets a caller supply a cached arch build; ``overrides``
+        are reduced-config field overrides (compiler-mode / dtype variants).
+        """
+        if built is None:
+            built = build_arch(self.arch, overrides)
+        cfg, model, params = built.cfg, built.model, built.params
         toks = jax.random.randint(jax.random.key(1), (batch, seq), 0, cfg.vocab)
         extra: Dict[str, Any] = {}
         if cfg.family == "encdec":
@@ -65,7 +91,11 @@ class Benchmark:
             from repro.launch.steps import make_train_step
             step, _ = make_train_step(cfg)
             from repro.optim.adamw import adamw_init
-            state = (params, adamw_init(params))
+            # copy params into the train state: the state may be donated
+            # (consumed in-place), and the cached Built must stay valid for
+            # the other tasks of this arch.
+            p0 = jax.tree_util.tree_map(jnp.copy, params)
+            state = (p0, adamw_init(p0))
             return step, (state, batch_dict), (0,)
         if self.task == "infer_prefill":
             cache = model.init_cache(batch, seq + 8 + (cfg.n_prefix or 0))
@@ -78,12 +108,15 @@ class Benchmark:
         raise ValueError(self.task)
 
 
+def get_benchmark(arch: str, task: str) -> Benchmark:
+    """Registry lookup: one suite entry by (arch, task)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r} (known: {sorted(ARCHS)})")
+    return Benchmark(name=f"{arch}/{task}", arch=arch, task=task,
+                     domain=DOMAINS[arch], criteria=CRITERIA.get(arch, "diverse"))
+
+
 def build_suite(tasks: Tuple[str, ...] = ("train", "infer_prefill", "infer_decode"),
                 archs: Optional[List[str]] = None) -> List[Benchmark]:
-    out = []
-    for arch in sorted(archs or ARCHS):
-        for task in tasks:
-            out.append(Benchmark(
-                name=f"{arch}/{task}", arch=arch, task=task,
-                domain=DOMAINS[arch], criteria=CRITERIA.get(arch, "diverse")))
-    return out
+    return [get_benchmark(arch, task)
+            for arch in sorted(archs or ARCHS) for task in tasks]

@@ -1,13 +1,20 @@
 import os
+import sys
 _DUMP_DIR = f"/tmp/repro_hlo_dump_{os.getpid()}"
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    f"--xla_dump_to={_DUMP_DIR} --xla_dump_hlo_pass_re=spmd-partitioning"
-)
+# The 512 placeholder devices are needed only where cells actually compile:
+# the ``python -m repro.launch.dryrun`` subprocess and scripts/dump_cell.py.
+# Under pytest this module is imported for its pure helpers (cell_rules,
+# input_specs) and the flags must NOT leak into the test process — tests
+# measure on the single real CPU device (see tests/conftest.py).
+if "pytest" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        f"--xla_dump_to={_DUMP_DIR} --xla_dump_hlo_pass_re=spmd-partitioning"
+    )
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST stay the first statements in this module — jax
+The statements above MUST stay first in this module — jax
 locks the device count at first backend init, and the production meshes
 (16x16 and 2x16x16) need 512 placeholder host devices.  Nothing here
 allocates real buffers: inputs are ShapeDtypeStructs, compilation is AOT.
@@ -229,6 +236,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # [dict] on some jax versions
+        ca = ca[0] if ca else {}
     cost, cost_src = _analyze_post_spmd(compiled)
     rl = roofline_from_cost(
         cost, arch=arch, shape=shape_name, mesh=_mesh_name(multi_pod),

@@ -518,7 +518,7 @@ class Model:
         return self._head(params, x), cache
 
     def _cache_len(self, cache):
-        lens = [v for k, v in jax.tree.flatten_with_path(cache)[0]
+        lens = [v for k, v in jax.tree_util.tree_flatten_with_path(cache)[0]
                 if k and getattr(k[-1], "key", None) == "len"]
         x = lens[0]
         return x.reshape(-1)[0] if x.ndim else x

@@ -1,0 +1,16 @@
+"""Unified benchmark execution subsystem: scenario matrix -> runner -> store.
+
+Public surface:
+
+    Scenario, ScenarioMatrix     declarative execution matrix
+    BenchmarkRunner, RunnerStats execution + build/executable reuse + isolation
+    RunResult, ResultStore       versioned records, JSONL log + latest pointer
+"""
+from repro.runner.results import SCHEMA_VERSION, ResultStore, RunResult
+from repro.runner.runner import (BenchmarkRunner, RunnerStats,
+                                 dryrun_cell_subprocess)
+from repro.runner.scenario import MODES, Scenario, ScenarioMatrix
+
+__all__ = ["Scenario", "ScenarioMatrix", "MODES", "BenchmarkRunner",
+           "RunnerStats", "RunResult", "ResultStore", "SCHEMA_VERSION",
+           "dryrun_cell_subprocess"]

@@ -1,0 +1,156 @@
+"""Persistent, schema'd benchmark results.
+
+``RunResult`` — one versioned record per scenario execution (schema v1):
+
+    schema       int    record version (this file: SCHEMA_VERSION)
+    name         str    scenario id "arch/task/bN/sN/dtype/mode"
+    bench        str    suite benchmark name "arch/task"
+    arch/task/batch/seq/dtype/mode   the scenario axes
+    status       str    "ok" | "error" | "skipped"
+    median_us, mean_us, p10_us, p90_us, compile_us   timing (us)
+    host_peak_bytes, device_bytes_delta              memory
+    runs         int    measured iterations (after warmup)
+    wall_s       float  end-to-end wall time incl. build/compile
+    cache        dict   {"model_reused": bool, "executable_reused": bool}
+    ts           float  unix timestamp
+    error        str?   exception text when status == "error"
+    extra        dict   free-form payload (dry-run cells, hook params, ...)
+
+``ResultStore`` — the persistence layer:
+
+    * an append-only JSONL run log (full history, one record per line);
+    * an atomically-rewritten latest-pointer JSON mapping name -> record.
+
+Two layouts: a directory (``<root>/runs.jsonl`` + ``<root>/latest.json``,
+the runner's layout) or a ``*.json`` file path (the latest pointer IS that
+file, log beside it as ``*.jsonl`` — the layout ``core.regression.MetricStore``
+sits on, keeping its historical single-file format readable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Iterator, List, Optional
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    bench: str
+    arch: str
+    task: str
+    batch: int
+    seq: int
+    dtype: str
+    mode: str
+    status: str = "ok"
+    median_us: float = 0.0
+    mean_us: float = 0.0
+    p10_us: float = 0.0
+    p90_us: float = 0.0
+    compile_us: float = 0.0
+    host_peak_bytes: int = 0
+    device_bytes_delta: int = 0
+    runs: int = 0
+    wall_s: float = 0.0
+    cache: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    ts: float = 0.0
+    error: Optional[str] = None
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema: int = SCHEMA_VERSION
+
+    @classmethod
+    def from_measurement(cls, scenario, m, *, wall_s: float = 0.0,
+                         cache: Optional[Dict[str, bool]] = None,
+                         extra: Optional[Dict[str, Any]] = None) -> "RunResult":
+        return cls(name=scenario.name, bench=scenario.bench,
+                   arch=scenario.arch, task=scenario.task,
+                   batch=scenario.batch, seq=scenario.seq,
+                   dtype=scenario.dtype, mode=scenario.mode,
+                   status="ok", median_us=m.median_us, mean_us=m.mean_us,
+                   p10_us=m.p10_us, p90_us=m.p90_us, compile_us=m.compile_us,
+                   host_peak_bytes=m.host_peak_bytes,
+                   device_bytes_delta=m.device_bytes_delta, runs=m.runs,
+                   wall_s=wall_s, cache=dict(cache or {}),
+                   ts=time.time(), extra=dict(extra or {}))
+
+    @classmethod
+    def from_error(cls, scenario, error: str, *, wall_s: float = 0.0) -> "RunResult":
+        return cls(name=scenario.name, bench=scenario.bench,
+                   arch=scenario.arch, task=scenario.task,
+                   batch=scenario.batch, seq=scenario.seq,
+                   dtype=scenario.dtype, mode=scenario.mode,
+                   status="error", error=error, wall_s=wall_s, ts=time.time())
+
+    def metrics(self) -> Dict[str, float]:
+        """The regression-CI metric view of this record."""
+        return {"median_us": self.median_us,
+                "host_peak_bytes": float(self.host_peak_bytes),
+                "device_bytes_delta": float(self.device_bytes_delta)}
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunResult":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+class ResultStore:
+    """JSONL run log + latest-pointer map, atomic on update."""
+
+    def __init__(self, path: str):
+        if path.endswith(".json"):
+            self.latest_path = path
+            self.log_path = path[: -len(".json")] + ".jsonl"
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        else:
+            os.makedirs(path, exist_ok=True)
+            self.latest_path = os.path.join(path, "latest.json")
+            self.log_path = os.path.join(path, "runs.jsonl")
+        self.latest: Dict[str, dict] = {}
+        if os.path.exists(self.latest_path):
+            with open(self.latest_path) as f:
+                self.latest = json.load(f)
+
+    def append(self, record) -> dict:
+        """Append one record (RunResult or plain dict with a "name" key) to
+        the log and move the latest pointer; returns the stored dict."""
+        rec = record.to_dict() if hasattr(record, "to_dict") else dict(record)
+        rec.setdefault("schema", SCHEMA_VERSION)
+        rec.setdefault("ts", time.time())
+        with open(self.log_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        self.latest[rec["name"]] = rec
+        tmp = self.latest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.latest, f, indent=1)
+        os.replace(tmp, self.latest_path)
+        return rec
+
+    def latest_result(self, name: str) -> Optional[RunResult]:
+        rec = self.latest.get(name)
+        return None if rec is None else RunResult.from_dict(rec)
+
+    def history(self, name: Optional[str] = None) -> Iterator[dict]:
+        """Replay the append log (optionally filtered to one scenario)."""
+        if not os.path.exists(self.log_path):
+            return
+        with open(self.log_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                if name is None or rec.get("name") == name:
+                    yield rec
+
+    def results(self) -> List[RunResult]:
+        """All latest records that parse as RunResults, sorted by name."""
+        return [RunResult.from_dict(r) for _, r in sorted(self.latest.items())
+                if isinstance(r, dict) and "arch" in r]

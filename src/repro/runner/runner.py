@@ -1,0 +1,320 @@
+"""The unified BenchmarkRunner: one execution path for the suite tables,
+figures, and regression CI.
+
+Responsibilities (previously hand-rolled per ``benchmarks/*`` script):
+
+* resolve ``Scenario``s against the suite registry (``core.suite``);
+* reuse expensive state across scenarios —
+  - **arch builds** (config + model + initialised params) are cached per
+    (arch, dtype, mode-overrides) and shared across every task/batch/seq
+    of that arch;
+  - **compiled executables** (jitted step + live threaded args) are cached
+    per scenario, so re-measuring the same cell (regression CI, bisection)
+    never re-jits or re-compiles;
+* optional **subprocess isolation** per scenario (fault containment for
+  crashy cells, the ``launch/dryrun`` idiom) via ``repro.runner.worker``;
+* emit a versioned ``RunResult`` per execution into a ``ResultStore``;
+* own the **derived** (compile-only dry-run) path with the same store-level
+  caching, so figures that share a cell pay for one subprocess, not N.
+
+``runner.stats`` counts builds/compiles/cache hits — the reuse speedup is
+benchmarked by ``benchmarks/runner_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.harness import (Measurement, RegressionHook, measure,
+                                measure_eager, prepare)
+from repro.core.suite import Benchmark, Built, build_arch, get_benchmark
+from repro.runner.results import ResultStore, RunResult
+from repro.runner.scenario import Scenario, ScenarioMatrix, select_scenarios
+
+
+def _src_dir() -> str:
+    import repro
+    pkg = (repro.__file__ and os.path.dirname(repro.__file__)) or \
+        list(repro.__path__)[0]
+    return os.path.dirname(os.path.abspath(pkg))
+
+
+def _subprocess_env() -> Dict[str, str]:
+    env = dict(os.environ)
+    src = _src_dir()
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return env
+
+
+@dataclasses.dataclass
+class RunnerStats:
+    model_builds: int = 0
+    model_cache_hits: int = 0
+    executable_builds: int = 0
+    executable_cache_hits: int = 0
+    dryrun_runs: int = 0
+    dryrun_cache_hits: int = 0
+    scenarios_run: int = 0
+    errors: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _ExecEntry:
+    jitted: Optional[Callable]      # None for eager mode
+    step: Callable
+    args: Tuple                     # threaded, donation-valid arguments
+    donate: Tuple[int, ...]
+
+
+class BenchmarkRunner:
+    def __init__(self, store: Optional[ResultStore] = None, *,
+                 runs: int = 5, warmup: int = 1, compile_warmup: int = 3,
+                 reuse: bool = True, isolate: bool = False):
+        self.store = store
+        self.runs = runs
+        self.warmup = warmup
+        # extra warmup steps after a fresh compile: the first post-compile
+        # iterations run well above steady state (thread-pool/allocator
+        # churn), which would skew a fresh measurement vs a cache-hit
+        # re-measure and break baseline comparability in regression CI
+        self.compile_warmup = compile_warmup
+        self.reuse = reuse
+        self.isolate = isolate
+        # session-level scenario selection (the CLI --filter/--exclude
+        # regexes), applied on top of each matrix's own selection
+        self.default_filter: Tuple[str, ...] = ()
+        self.default_exclude: Tuple[str, ...] = ()
+        # force recompilation of cached dry-run cells (CLI --refresh)
+        self.dryrun_refresh = False
+        self.stats = RunnerStats()
+        self._built: Dict[Tuple, Built] = {}
+        self._execs: Dict[Scenario, _ExecEntry] = {}
+        self._dryrun_mem: Dict[str, dict] = {}
+
+    # ---- build / executable caches -------------------------------------
+
+    def built_for(self, arch: str, *, dtype: str = "fp32",
+                  mode: str = "jit_donated") -> Built:
+        """The cached arch build for (arch, dtype, mode-overrides)."""
+        sc = Scenario(arch=arch, dtype=dtype, mode=mode)
+        key = sc.build_key()
+        if key in self._built:
+            self.stats.model_cache_hits += 1
+            return self._built[key]
+        built = build_arch(arch, sc.build_overrides())
+        self.stats.model_builds += 1
+        if self.reuse:
+            self._built[key] = built
+        return built
+
+    def _resolve(self, scenario: Scenario) -> Tuple[_ExecEntry, Dict[str, bool]]:
+        if self.reuse and scenario in self._execs:
+            self.stats.executable_cache_hits += 1
+            return self._execs[scenario], {"model_reused": True,
+                                           "executable_reused": True}
+        hits0 = self.stats.model_cache_hits
+        built = self.built_for(scenario.arch, dtype=scenario.dtype,
+                               mode=scenario.mode)
+        bench = get_benchmark(scenario.arch, scenario.task)
+        step, args, donate = bench.make(batch=scenario.batch, seq=scenario.seq,
+                                        built=built)
+        if scenario.mode == "eager":
+            entry = _ExecEntry(jitted=None, step=step, args=args, donate=())
+        else:
+            d = donate if scenario.mode == "jit_donated" else ()
+            entry = _ExecEntry(jitted=prepare(step, d), step=step,
+                               args=args, donate=d)
+            self.stats.executable_builds += 1
+        if self.reuse:
+            self._execs[scenario] = entry
+        return entry, {"model_reused": self.stats.model_cache_hits > hits0,
+                       "executable_reused": False}
+
+    # ---- measured path --------------------------------------------------
+
+    def run(self, scenario: Scenario, *, hook: Optional[RegressionHook] = None,
+            runs: Optional[int] = None, warmup: Optional[int] = None,
+            record: bool = True) -> RunResult:
+        """Execute one scenario and return its RunResult (never raises for
+        benchmark failures — they come back as status="error" records)."""
+        if self.isolate:
+            return self._run_isolated(scenario, hook=hook, runs=runs,
+                                      warmup=warmup, record=record)
+        t0 = time.perf_counter()
+        self.stats.scenarios_run += 1
+        try:
+            entry, cache = self._resolve(scenario)
+            if scenario.mode == "eager":
+                m = measure_eager(scenario.name, entry.step, entry.args,
+                                  runs=max(2, (runs or self.runs) // 2),
+                                  hook=hook)
+            else:
+                final_args: List[Tuple] = []
+                wu = self.warmup if warmup is None else warmup
+                if not cache.get("executable_reused"):
+                    wu += self.compile_warmup
+                m = measure(scenario.name, entry.step, entry.args, entry.donate,
+                            runs=runs or self.runs, warmup=wu,
+                            hook=hook, jitted=entry.jitted,
+                            final_args=final_args)
+                if self.reuse and final_args:
+                    # donated buffers were consumed: keep the threaded args
+                    # so the cached executable stays callable next time
+                    entry.args = final_args[0]
+            rr = RunResult.from_measurement(
+                scenario, m, wall_s=time.perf_counter() - t0, cache=cache)
+            if cache.get("executable_reused"):
+                # nothing compiled on a cache hit; measure()'s first call
+                # timed an ordinary step, which is not a compile time
+                rr.compile_us = 0.0
+        except Exception as e:  # noqa: BLE001 — fault containment per cell
+            self.stats.errors += 1
+            # a failed measure may have consumed donated buffers mid-loop:
+            # evict the cached executable so the next run rebuilds cleanly
+            self._execs.pop(scenario, None)
+            rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
+                                      wall_s=time.perf_counter() - t0)
+        if record and self.store is not None:
+            self.store.append(rr)
+        return rr
+
+    def select(self, matrix: ScenarioMatrix) -> List[Scenario]:
+        """Matrix expansion with the runner's session-level filter/exclude
+        applied after the matrix's own selection (both must pass)."""
+        return select_scenarios(matrix.expand(),
+                                self.default_filter, self.default_exclude)
+
+    def run_matrix(self, matrix: ScenarioMatrix, *,
+                   hooks: Optional[Dict[str, RegressionHook]] = None,
+                   runs: Optional[int] = None,
+                   warmup: Optional[int] = None) -> List[RunResult]:
+        """Run every scenario of the matrix; hooks are keyed by benchmark
+        name ("arch/task") or full scenario name."""
+        out = []
+        for sc in self.select(matrix):
+            hook = (hooks or {}).get(sc.name) or (hooks or {}).get(sc.bench)
+            out.append(self.run(sc, hook=hook, runs=runs, warmup=warmup))
+        return out
+
+    # ---- subprocess isolation -------------------------------------------
+
+    def _run_isolated(self, scenario: Scenario, *,
+                      hook: Optional[RegressionHook] = None,
+                      runs: Optional[int] = None,
+                      warmup: Optional[int] = None,
+                      record: bool = True, timeout: int = 1200) -> RunResult:
+        """One scenario in its own interpreter: a crash (OOM, segfault in a
+        kernel, ...) becomes an error record instead of killing the sweep."""
+        t0 = time.perf_counter()
+        self.stats.scenarios_run += 1
+        fd, out = tempfile.mkstemp(suffix=".json", prefix="repro_runner_")
+        os.close(fd)
+        cmd = [sys.executable, "-m", "repro.runner.worker",
+               "--scenario", json.dumps(scenario.to_dict()),
+               "--runs", str(runs or self.runs),
+               "--warmup", str(self.warmup if warmup is None else warmup),
+               "--json", out]
+        if hook is not None:
+            cmd += ["--slowdown-s", str(hook.slowdown_s),
+                    "--leak-bytes", str(hook.leak_bytes)]
+        try:
+            r = subprocess.run(cmd, env=_subprocess_env(), capture_output=True,
+                               text=True, timeout=timeout)
+            if r.returncode == 0 and os.path.getsize(out):
+                with open(out) as f:
+                    rr = RunResult.from_dict(json.load(f))
+                rr.wall_s = time.perf_counter() - t0
+                rr.extra["isolated"] = True
+            else:
+                self.stats.errors += 1
+                rr = RunResult.from_error(
+                    scenario, f"worker exit {r.returncode}: {r.stderr[-500:]}",
+                    wall_s=time.perf_counter() - t0)
+        except subprocess.TimeoutExpired:
+            self.stats.errors += 1
+            rr = RunResult.from_error(scenario, f"worker timeout after {timeout}s",
+                                      wall_s=time.perf_counter() - t0)
+        finally:
+            if os.path.exists(out):
+                os.remove(out)
+        if record and self.store is not None:
+            self.store.append(rr)
+        return rr
+
+    # ---- derived (compile-only dry-run) path -----------------------------
+
+    def run_dryrun(self, arch: str, shape: str, *, multi_pod: bool = False,
+                   rules: Optional[dict] = None, refresh: bool = False,
+                   timeout: int = 1200) -> Dict[str, Any]:
+        """One dry-run cell (compile-only, subprocess so THIS process keeps
+        its single CPU device), cached in the ResultStore: figures sharing a
+        cell pay for one compile across tables AND across invocations.
+
+        The cache key is (arch, shape, mesh) only — after config/rule/model
+        changes pass ``refresh=True`` (CLI: ``benchmarks.run --refresh``)
+        to recompile.  Rule-overridden cells are never cached."""
+        name = f"{arch}/{shape}/{'2x16x16' if multi_pod else '16x16'}/dryrun"
+        if not (refresh or self.dryrun_refresh or rules):
+            cached = self._dryrun_mem.get(name)
+            if cached is None and self.store is not None:
+                rec = self.store.latest.get(name)
+                if rec and rec.get("status") == "ok" and rec.get("extra", {}).get("cell"):
+                    cached = rec["extra"]["cell"]
+            if cached is not None:
+                self.stats.dryrun_cache_hits += 1
+                self._dryrun_mem[name] = cached
+                return cached
+        self.stats.dryrun_runs += 1
+        cell = dryrun_cell_subprocess(arch, shape, multi_pod=multi_pod,
+                                      rules=rules, timeout=timeout)
+        if rules:
+            return cell   # rule-varied cells don't overwrite the canonical cache
+        self._dryrun_mem[name] = cell
+        if self.store is not None:
+            status = "skipped" if "skipped" in cell else \
+                     ("error" if "error" in cell else "ok")
+            self.store.append(RunResult(
+                name=name, bench=f"{arch}/{shape}", arch=arch, task="train",
+                batch=0, seq=0, dtype="fp32", mode="jit_donated",
+                status=status, error=cell.get("error"),
+                ts=time.time(), extra={"cell": cell, "derived": True}))
+        return cell
+
+    def dryrun_cells(self, cells: Sequence[Tuple[str, str]], *,
+                     multi_pod: bool = False) -> List[Dict[str, Any]]:
+        return [self.run_dryrun(a, s, multi_pod=multi_pod) for a, s in cells]
+
+
+def dryrun_cell_subprocess(arch: str, shape: str, *, multi_pod: bool = False,
+                           rules: Optional[dict] = None,
+                           timeout: int = 1200) -> Dict[str, Any]:
+    """Compile one (arch x shape) cell in a subprocess and return its record
+    (the dry-run forces 512 host devices, which must not leak into us)."""
+    fd, out = tempfile.mkstemp(suffix=".json", prefix="repro_dryrun_")
+    os.close(fd)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if rules:
+        cmd += ["--rules", json.dumps(rules)]
+    try:
+        r = subprocess.run(cmd, env=_subprocess_env(), capture_output=True,
+                           text=True, timeout=timeout)
+        if r.returncode != 0:
+            raise RuntimeError(f"dryrun {arch}x{shape} failed:\n{r.stderr[-2000:]}")
+        with open(out) as f:
+            return json.load(f)[0]
+    finally:
+        if os.path.exists(out):
+            os.remove(out)

@@ -1,0 +1,140 @@
+"""Declarative scenario matrix for the unified benchmark runner.
+
+A ``Scenario`` is one fully-specified benchmark execution:
+
+    arch x task x batch x seq x dtype x compiler-mode
+
+``ScenarioMatrix`` expands the cartesian product and applies the
+torchbench-driver selection semantics (regex ``filter`` / ``exclude``
+against the scenario name, plus an exact ``skip`` list — matching the
+torchdynamo ``iter_models`` front door).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import re
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+TASKS = ("train", "infer_prefill", "infer_decode")
+
+#: compiler-execution modes (paper Figs. 3-4 comparison; see core/compilers.py)
+#:   eager        op-by-op dispatch (jax.disable_jit)
+#:   jit          whole-step XLA compilation, no buffer donation
+#:   jit_donated  + donated state buffers (the standard steady-state protocol)
+#:   jit_unrolled layer scan unrolled  (cfg: scan_layers=False)
+#:   jit_noremat  no rematerialization (cfg: remat="none")
+MODES = ("eager", "jit", "jit_donated", "jit_unrolled", "jit_noremat")
+
+#: reduced-config overrides per mode (applied at arch-build time)
+MODE_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "jit_unrolled": {"scan_layers": False},
+    "jit_noremat": {"remat": "none"},
+}
+
+DTYPES = ("fp32", "bf16")
+
+
+def dtype_overrides(dtype: str) -> Dict[str, Any]:
+    if dtype == "fp32":
+        return {}
+    if dtype == "bf16":
+        import jax.numpy as jnp
+        return {"param_dtype": jnp.bfloat16}
+    raise ValueError(f"unknown dtype {dtype!r} (known: {DTYPES})")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the execution matrix (hashable: used as a cache key)."""
+    arch: str
+    task: str = "train"
+    batch: int = 2
+    seq: int = 64
+    dtype: str = "fp32"
+    mode: str = "jit_donated"
+
+    def __post_init__(self):
+        if self.task not in TASKS:
+            raise ValueError(f"unknown task {self.task!r} (known: {TASKS})")
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r} (known: {MODES})")
+        if self.dtype not in DTYPES:
+            raise ValueError(f"unknown dtype {self.dtype!r} (known: {DTYPES})")
+
+    @property
+    def bench(self) -> str:
+        """The suite-registry benchmark name ("arch/task")."""
+        return f"{self.arch}/{self.task}"
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.task}/b{self.batch}/s{self.seq}/{self.dtype}/{self.mode}"
+
+    def build_overrides(self) -> Dict[str, Any]:
+        """Reduced-config overrides implied by (mode, dtype)."""
+        return {**dtype_overrides(self.dtype), **MODE_OVERRIDES.get(self.mode, {})}
+
+    def build_key(self) -> Tuple:
+        """Cache key for the arch build (model + params) this scenario needs."""
+        return (self.arch, self.dtype, self.mode in MODE_OVERRIDES and self.mode)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d})
+
+
+def select_scenarios(scenarios: Iterable[Scenario],
+                     filter: Sequence[str] = (),
+                     exclude: Sequence[str] = ()) -> List[Scenario]:
+    """The shared selection semantics: keep iff ANY ``filter`` regex matches
+    the scenario name (empty keeps all); drop if ANY ``exclude`` matches."""
+    flt = re.compile("|".join(filter)) if filter else None
+    exc = re.compile("|".join(exclude)) if exclude else None
+    return [s for s in scenarios
+            if (flt is None or flt.search(s.name))
+            and not (exc is not None and exc.search(s.name))]
+
+
+@dataclasses.dataclass
+class ScenarioMatrix:
+    """Cartesian scenario expander with filter/exclude/skip selection.
+
+    * ``filter``  — regex list; a scenario is kept iff ANY regex matches its
+      name (empty list keeps everything);
+    * ``exclude`` — regex list; a scenario is dropped if ANY regex matches;
+    * ``skip``    — exact names: a full scenario name, a benchmark name
+      ("arch/task"), or a bare arch (the torchbench SKIP-set idiom for
+      known-broken models).
+    """
+    archs: Sequence[str]
+    tasks: Sequence[str] = TASKS
+    batches: Sequence[int] = (2,)
+    seqs: Sequence[int] = (64,)
+    dtypes: Sequence[str] = ("fp32",)
+    modes: Sequence[str] = ("jit_donated",)
+    filter: Sequence[str] = ()
+    exclude: Sequence[str] = ()
+    skip: Sequence[str] = ()
+
+    def expand(self) -> List[Scenario]:
+        skip = set(self.skip)
+        out: List[Scenario] = []
+        for arch, task, batch, seq, dtype, mode in itertools.product(
+                self.archs, self.tasks, self.batches, self.seqs,
+                self.dtypes, self.modes):
+            s = Scenario(arch=arch, task=task, batch=batch, seq=seq,
+                         dtype=dtype, mode=mode)
+            if {s.name, s.bench, s.arch} & skip:
+                continue
+            out.append(s)
+        return select_scenarios(out, self.filter, self.exclude)
+
+    def __iter__(self):
+        return iter(self.expand())
+
+    def __len__(self) -> int:
+        return len(self.expand())

@@ -1,0 +1,46 @@
+"""Subprocess worker for isolated scenario execution.
+
+    python -m repro.runner.worker --scenario '{"arch": "gemma-2b", ...}' \
+        --runs 3 --json out.json [--slowdown-s S --leak-bytes N]
+
+Runs ONE scenario in this interpreter via an in-process BenchmarkRunner and
+writes its RunResult JSON to ``--json``.  The parent (``BenchmarkRunner``
+with ``isolate=True``) treats a crash/timeout of this process as an error
+record — fault containment per cell, the ``launch/dryrun`` subprocess idiom.
+The regression-hook parameters are plain numbers so injected-fault CI runs
+can be isolated too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", required=True, help="Scenario JSON dict")
+    ap.add_argument("--runs", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--slowdown-s", type=float, default=0.0)
+    ap.add_argument("--leak-bytes", type=int, default=0)
+    ap.add_argument("--json", required=True)
+    args = ap.parse_args(argv)
+
+    from repro.core.harness import RegressionHook
+    from repro.runner.runner import BenchmarkRunner
+    from repro.runner.scenario import Scenario
+
+    scenario = Scenario.from_dict(json.loads(args.scenario))
+    hook = None
+    if args.slowdown_s or args.leak_bytes:
+        hook = RegressionHook(slowdown_s=args.slowdown_s,
+                              leak_bytes=args.leak_bytes)
+    runner = BenchmarkRunner(runs=args.runs, warmup=args.warmup)
+    rr = runner.run(scenario, hook=hook, record=False)
+    with open(args.json, "w") as f:
+        json.dump(rr.to_dict(), f)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

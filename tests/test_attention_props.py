@@ -2,7 +2,10 @@
 the sharding resolver — the system's core numeric/distribution invariants."""
 import math
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need the hypothesis package")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

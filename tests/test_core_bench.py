@@ -32,8 +32,11 @@ def test_hlo_analyzer_trip_count_correction():
     c = analyze_hlo(comp.as_text())
     expect = 9 * 2 * 64 ** 3
     assert 0.9 < c.flops / expect < 1.2
-    # XLA's own number misses the trip count (documented limitation)
-    assert comp.cost_analysis()["flops"] < 0.5 * expect
+    # XLA's own number misses the trip count (documented limitation);
+    # cost_analysis() returns [dict] on some jax versions, dict on others
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca["flops"] < 0.5 * expect
 
 
 def test_roofline_terms_and_dominance():

@@ -1,11 +1,14 @@
 """Optimizer math, gradient compression, data determinism, checkpointing."""
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based tests need the hypothesis package")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.checkpoint import CheckpointManager, latest_step, restore_pytree, save_pytree

@@ -1,0 +1,164 @@
+"""The unified BenchmarkRunner subsystem: scenario-matrix expansion
+(filter/exclude/skip), ResultStore round-trips, build/executable reuse
+accounting, donation threading, and regression detection driven through the
+store-backed MetricStore."""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.harness import RegressionHook, measure
+from repro.core.regression import MetricStore, detect
+from repro.runner import (BenchmarkRunner, ResultStore, RunResult, Scenario,
+                          ScenarioMatrix)
+
+
+# ---- scenario matrix ------------------------------------------------------
+
+def test_matrix_expansion_is_full_product():
+    m = ScenarioMatrix(archs=["a1", "a2"], tasks=("train", "infer_decode"),
+                       batches=(1, 4), seqs=(16,), modes=("jit", "eager"))
+    names = [s.name for s in m.expand()]
+    assert len(names) == len(set(names)) == 2 * 2 * 2 * 1 * 2
+    assert "a1/train/b1/s16/fp32/jit" in names
+    assert len(m) == 16
+
+
+def test_matrix_filter_exclude_skip():
+    m = ScenarioMatrix(archs=["gemma-2b", "mamba2-2.7b", "mixtral-8x7b"],
+                       tasks=("train", "infer_decode"),
+                       filter=[r"gemma|mamba"],          # keep two archs
+                       exclude=[r"infer_"],              # drop inference
+                       skip=["mamba2-2.7b/train"])       # exact bench skip
+    names = [s.name for s in m.expand()]
+    assert names == ["gemma-2b/train/b2/s64/fp32/jit_donated"]
+    # bare-arch skip (the torchbench SKIP-set idiom)
+    m2 = ScenarioMatrix(archs=["gemma-2b", "mamba2-2.7b"], tasks=("train",),
+                        skip=["mamba2-2.7b"])
+    assert [s.arch for s in m2.expand()] == ["gemma-2b"]
+
+
+def test_scenario_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        Scenario(arch="gemma-2b", task="nope")
+    with pytest.raises(ValueError):
+        Scenario(arch="gemma-2b", mode="tpu_magic")
+    sc = Scenario(arch="gemma-2b", task="train", batch=4, seq=128, mode="jit")
+    assert Scenario.from_dict(json.loads(json.dumps(sc.to_dict()))) == sc
+
+
+def test_runner_session_filter():
+    r = BenchmarkRunner()
+    r.default_exclude = (r"infer_",)
+    m = ScenarioMatrix(archs=["gemma-2b"])
+    assert [s.task for s in r.select(m)] == ["train"]
+
+
+# ---- result store ---------------------------------------------------------
+
+def test_result_store_roundtrip_and_latest_pointer(tmp_path):
+    store = ResultStore(str(tmp_path / "store"))
+    sc = Scenario(arch="gemma-2b", task="train", batch=1, seq=8)
+    class _M:  # minimal Measurement stand-in
+        median_us, mean_us, p10_us, p90_us = 10.0, 11.0, 9.0, 12.0
+        compile_us, host_peak_bytes, device_bytes_delta, runs = 100.0, 7, 3, 2
+    store.append(RunResult.from_measurement(sc, _M))
+    store.append(RunResult.from_measurement(sc, type("M2", (_M,), {"median_us": 20.0})))
+    # latest pointer holds the second record; the log holds both
+    fresh = ResultStore(str(tmp_path / "store"))
+    latest = fresh.latest_result(sc.name)
+    assert latest is not None and latest.median_us == 20.0
+    assert latest.schema == 1 and latest.status == "ok"
+    assert [r["median_us"] for r in fresh.history(sc.name)] == [10.0, 20.0]
+    assert [r.name for r in fresh.results()] == [sc.name]
+
+
+def test_metric_store_on_result_store(tmp_path):
+    """regression.detect driven through the ResultStore-backed MetricStore."""
+    path = str(tmp_path / "metrics.json")
+    store = MetricStore(path)
+    store.update("bench/a", {"median_us": 100.0, "host_peak_bytes": 1000})
+    store.update("bench/a", {"median_us": 110.0, "host_peak_bytes": 1000})
+    # the latest pointer file keeps the historical single-JSON format
+    with open(path) as f:
+        assert json.load(f)["bench/a"]["median_us"] == 110.0
+    # the JSONL log replays both baselines
+    assert [r["median_us"] for r in store.history("bench/a")] == [100.0, 110.0]
+    # reload + detect against the latest baseline
+    store2 = MetricStore(path)
+    assert detect(store2, "bench/a", {"median_us": 115.0}) == []
+    issues = detect(store2, "bench/a", {"median_us": 130.0})
+    assert len(issues) == 1 and issues[0].increase > 0.07
+    assert store2.baseline("missing") is None
+
+
+# ---- execution + reuse ----------------------------------------------------
+
+def test_runner_reuse_accounting(tmp_path):
+    r = BenchmarkRunner(store=ResultStore(str(tmp_path / "s")), runs=2, warmup=0)
+    sc = Scenario(arch="gemma-2b", task="train", batch=1, seq=8)
+    r1 = r.run(sc)
+    assert r1.status == "ok" and r1.median_us > 0
+    assert r.stats.model_builds == 1 and r.stats.executable_cache_hits == 0
+    assert r1.cache == {"model_reused": False, "executable_reused": False}
+    # same scenario again: executable cache hit, no new build/compile
+    r2 = r.run(sc)
+    assert r2.status == "ok"
+    assert r.stats.model_builds == 1 and r.stats.executable_cache_hits == 1
+    assert r2.cache == {"model_reused": True, "executable_reused": True}
+    assert r2.compile_us == 0.0   # nothing compiled on a cache hit
+    # different task of the same arch: model build reused, new executable
+    r3 = r.run(Scenario(arch="gemma-2b", task="infer_decode", batch=1, seq=8))
+    assert r3.status == "ok"
+    assert r.stats.model_builds == 1 and r.stats.model_cache_hits >= 1
+    assert r3.cache["model_reused"] and not r3.cache["executable_reused"]
+    # all three runs landed in the store
+    assert len(list(r.store.history())) == 3
+
+
+def test_runner_error_containment():
+    r = BenchmarkRunner(runs=1, warmup=0)
+    rr = r.run(Scenario(arch="no-such-arch"))
+    assert rr.status == "error" and "no-such-arch" in rr.error
+    assert r.stats.errors == 1
+
+
+class _ExplodingHook(RegressionHook):
+    def fire(self):
+        raise RuntimeError("boom mid-measure")
+
+
+def test_runner_evicts_poisoned_donated_executable():
+    """A mid-measure failure may leave the cached executable's donated args
+    consumed; the entry must be evicted so the next run rebuilds cleanly."""
+    r = BenchmarkRunner(runs=2, warmup=0)
+    sc = Scenario(arch="gemma-2b", task="train", batch=1, seq=8)
+    assert r.run(sc).status == "ok"
+    bad = r.run(sc, hook=_ExplodingHook())
+    assert bad.status == "error" and "boom" in bad.error
+    ok = r.run(sc)   # must not reuse the half-consumed cached args
+    assert ok.status == "ok" and ok.median_us > 0
+
+
+def test_measure_donation_consumes_and_threads():
+    """The donate satellite: donate_argnums is actually passed, the donated
+    input is consumed, and the threaded state keeps subsequent calls valid."""
+    def step(state, x):
+        return state + x, state.sum()
+
+    args = (jnp.ones(8), jnp.ones(8))
+    m = measure("donated", step, args, donate=(0,), runs=3)
+    assert m.runs == 3 and m.median_us > 0
+    assert args[0].is_deleted()        # state buffer was donated
+    assert not args[1].is_deleted()    # batch arg was not
+
+
+def test_runner_donated_scenario_repeats(tmp_path):
+    """Cached executables stay callable across re-measures even though their
+    state buffers are donated (the threaded args are kept in the cache)."""
+    r = BenchmarkRunner(runs=2, warmup=0)
+    sc = Scenario(arch="gemma-2b", task="train", batch=1, seq=8,
+                  mode="jit_donated")
+    for _ in range(3):
+        assert r.run(sc).status == "ok"
+    assert r.stats.executable_cache_hits == 2

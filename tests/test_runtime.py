@@ -1,8 +1,11 @@
 """Fault tolerance: supervisor restart/replay, stragglers, elastic rescale."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based tests need the hypothesis package")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.checkpoint import CheckpointManager
