@@ -2,7 +2,7 @@
 executed through the unified ``repro.runner.BenchmarkRunner``.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
-        [--filter RE ...] [--exclude RE ...] [--isolate]
+        [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N]
 
 One ``BenchmarkRunner`` + ``ResultStore`` (``results/store``) is shared by
 every table: arch builds, compiled executables, and dry-run cells are
@@ -13,7 +13,9 @@ JSONL run log with a latest-pointer for ``scripts/report_tables.py``.
 ``--filter`` / ``--exclude`` are regexes over scenario names
 ("arch/task/bN/sN/dtype/mode"), applied to the measured-suite tables —
 the torchbench driver's model-selection semantics.  ``--isolate`` runs
-each scenario in its own subprocess (fault containment for crashy cells).
+each scenario in its own subprocess (fault containment for crashy cells);
+``--jobs N`` shards every ``run_matrix`` sweep across N persistent worker
+subprocesses (see ``repro/runner/pool.py``).
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 """
@@ -35,6 +37,8 @@ def main(argv=None) -> int:
                     help="regex over scenario names; drop matches")
     ap.add_argument("--isolate", action="store_true",
                     help="one subprocess per scenario (fault containment)")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="shard matrix sweeps across N worker subprocesses")
     ap.add_argument("--refresh", action="store_true",
                     help="recompile cached dry-run cells (after config/model changes)")
     args = ap.parse_args(argv)
@@ -43,7 +47,7 @@ def main(argv=None) -> int:
                             fig34_compilers, roofline, runner_bench,
                             table1_suite, table45_ci)
     from benchmarks.common import make_runner
-    runner = make_runner(isolate=args.isolate)
+    runner = make_runner(isolate=args.isolate, jobs=args.jobs)
     runner.default_filter = tuple(args.filter)
     runner.default_exclude = tuple(args.exclude)
     runner.dryrun_refresh = args.refresh
@@ -58,17 +62,20 @@ def main(argv=None) -> int:
         "runner_bench": runner_bench.main,         # runner reuse speedup
     }
     failed = 0
-    for name, fn in tables.items():
-        if args.only and name != args.only:
-            continue
-        print(f"# === {name} ===", flush=True)
-        t0 = time.time()
-        try:
-            fn(fast=args.fast, runner=runner)
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
-        except Exception:
-            failed += 1
-            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr, flush=True)
+    try:
+        for name, fn in tables.items():
+            if args.only and name != args.only:
+                continue
+            print(f"# === {name} ===", flush=True)
+            t0 = time.time()
+            try:
+                fn(fast=args.fast, runner=runner)
+                print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            except Exception:
+                failed += 1
+                print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr, flush=True)
+    finally:
+        runner.close()
     print(f"# runner stats: {runner.stats.to_dict()}", flush=True)
     return 1 if failed else 0
 

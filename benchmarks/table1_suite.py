@@ -6,8 +6,9 @@ coverage multiple vs the single-dense-LM baseline (the paper's "2.3x
 MLPerf" claim, reproduced quantitatively).
 
 Measurement goes through the shared ``BenchmarkRunner``: the coverage
-tracer and the timing pass reuse one arch build each, and every row lands
-in the persistent ResultStore."""
+tracer and the timing pass reuse one arch build each, every row lands in
+the persistent ResultStore, and the timing sweep is one ``run_matrix``
+call — shardable across worker subprocesses with ``--jobs N``."""
 from __future__ import annotations
 
 import json
@@ -27,8 +28,7 @@ def main(fast: bool = False, runner=None) -> None:
     benches = [get_benchmark(s.arch, s.task) for s in scenarios]
     rep = coverage_report(benches, batch=1, seq=16, runner=runner)
     rows = []
-    for b, sc in zip(benches, scenarios):
-        rr = runner.run(sc, runs=3)
+    for b, rr in zip(benches, runner.run_matrix(matrix, runs=3)):
         if rr.status != "ok":
             emit(f"table1/{b.name}", 0.0, f"status={rr.status};error={(rr.error or '')[:60]}")
             continue

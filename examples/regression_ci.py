@@ -2,8 +2,14 @@
 store, an injected "bad commit", detection at the 7% threshold, and binary-
 search bisection to the culprit.
 
-    PYTHONPATH=src python examples/regression_ci.py
+    PYTHONPATH=src python examples/regression_ci.py [--jobs N]
+
+``--jobs N`` shards each night's matrix across N persistent worker
+subprocesses (the injected hooks cross the process boundary as plain
+slowdown/leak parameters); the pool keeps worker caches warm across
+nights.
 """
+import argparse
 import sys
 import tempfile
 
@@ -15,30 +21,47 @@ from repro.core.regression import Commit, MetricStore, bisect_commits  # noqa: E
 from repro.runner import BenchmarkRunner, Scenario  # noqa: E402
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="shard nightly matrix runs across N worker subprocesses")
+    args = ap.parse_args(argv)
     store = MetricStore(tempfile.mktemp(suffix=".json"))
     archs = ["gemma-2b", "mamba2-2.7b"]
     # one runner for the whole CI day: nights and bisection probes share
-    # cached arch builds and compiled executables
-    runner = BenchmarkRunner(runs=3)
+    # cached arch builds and compiled executables (and, with --jobs, the
+    # persistent shard workers' caches)
+    runner = BenchmarkRunner(runs=3, jobs=args.jobs)
+    try:
+        return _ci_day(store, archs, runner)
+    finally:
+        runner.close()       # shard workers must die even on a failed assert
+
+
+def _ci_day(store, archs, runner) -> int:
+    # small probe cells: a ~10ms step means the injected 50ms/step
+    # regression is a 4-5x blowup that shared-host timing jitter (easily
+    # +-50% on busy boxes) can never mask at the 7% threshold
+    probe = dict(tasks=("train",), batches=(1,), seqs=(16,), runs=3)
 
     print("== night 0: record baselines ==")
-    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3,
-                      update_baseline=True, runner=runner)
+    rep = run_nightly(store, archs=archs, update_baseline=True,
+                      runner=runner, **probe)
     print(f"ran {rep.ran} benchmarks in {rep.wall_s:.1f}s")
 
     print("\n== night 1: a commit slows gemma-2b training by ~50ms/step ==")
     hooks = {"gemma-2b/train": RegressionHook(slowdown_s=0.05)}
-    rep = run_nightly(store, archs=archs, tasks=("train",), runs=3, hooks=hooks,
-                      runner=runner)
+    rep = run_nightly(store, archs=archs, hooks=hooks, runner=runner,
+                      **probe)
     print(f"ran {rep.ran} benchmarks in {rep.wall_s:.1f}s (cached executables)")
     for issue in rep.issues:
         print(f"ISSUE: {issue.benchmark} {issue.metric} +{issue.increase:.0%} "
               f"(baseline {issue.baseline:.0f}, observed {issue.observed:.0f})")
-    assert any(i.metric == "median_us" for i in rep.issues)
+    sc = Scenario(arch="gemma-2b", task="train", batch=1, seq=16)
+    assert any(i.benchmark == sc.bench and i.metric == "median_us"
+               for i in rep.issues)
 
     print("\n== bisect the day's 12 commits ==")
-    sc = Scenario(arch="gemma-2b", task="train")
     base = store.baseline(sc.bench)["median_us"]
 
     def commit_runner(bad):
@@ -49,9 +72,12 @@ def main() -> int:
 
     commits = [Commit(f"c{i:02d}", i, commit_runner(i >= 8)) for i in range(12)]
     trace: list = []
-    # classify at half the regression size the nightly detected, so host
-    # noise on shared boxes can't flag a good commit as the culprit
-    inc = max(i.increase for i in rep.issues if i.metric == "median_us")
+    # classify at half the size of the regression we're hunting — THIS
+    # bench's nightly increase, not the max across the suite (another
+    # bench's noise blip must not inflate the bisection threshold) — so
+    # host noise on shared boxes can't flag a good commit as the culprit
+    inc = max(i.increase for i in rep.issues
+              if i.benchmark == sc.bench and i.metric == "median_us")
     culprit = bisect_commits(commits, sc.bench, "median_us", base,
                              threshold=max(0.07, inc / 2), trace=trace)
     for t in trace:

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# PR smoke gate: tier-1 tests + the runner-driven table1 path end-to-end.
+# PR smoke gate: tier-1 tests + the runner-driven table1 path end-to-end
+# + a sharded (--jobs 2) run_matrix smoke.
 #
 #     bash scripts/smoke.sh [--fast-only]
 #
@@ -17,5 +18,24 @@ fi
 
 echo "== runner path: table1_suite --fast =="
 python -m benchmarks.run --fast --only table1_suite
+
+echo "== sharded dispatch: 2-cell matrix across --jobs 2 workers =="
+python - <<'EOF'
+from repro.runner import BenchmarkRunner, ScenarioMatrix
+
+matrix = ScenarioMatrix(archs=["gemma-2b"], tasks=("train",),
+                        batches=(1,), seqs=(8,), dtypes=("fp32", "bf16"))
+runner = BenchmarkRunner(runs=1, warmup=0, jobs=2)
+try:
+    results = runner.run_matrix(matrix)
+finally:
+    runner.close()
+for rr in results:
+    print(f"  {rr.name}: {rr.status} (shard {rr.extra.get('shard')})")
+    assert rr.status == "ok", rr.error
+assert {rr.extra.get("shard") for rr in results} == {0, 1}
+assert runner.stats.model_builds == 2, runner.stats.to_dict()
+print("sharded smoke OK")
+EOF
 
 echo "smoke OK"

@@ -4,13 +4,15 @@ Public surface:
 
     Scenario, ScenarioMatrix     declarative execution matrix
     BenchmarkRunner, RunnerStats execution + build/executable reuse + isolation
+    ShardScheduler, assign_shards sharded process-pool dispatch (jobs=N)
     RunResult, ResultStore       versioned records, JSONL log + latest pointer
 """
+from repro.runner.pool import ShardScheduler, assign_shards
 from repro.runner.results import SCHEMA_VERSION, ResultStore, RunResult
 from repro.runner.runner import (BenchmarkRunner, RunnerStats,
                                  dryrun_cell_subprocess)
 from repro.runner.scenario import MODES, Scenario, ScenarioMatrix
 
 __all__ = ["Scenario", "ScenarioMatrix", "MODES", "BenchmarkRunner",
-           "RunnerStats", "RunResult", "ResultStore", "SCHEMA_VERSION",
-           "dryrun_cell_subprocess"]
+           "RunnerStats", "ShardScheduler", "assign_shards", "RunResult",
+           "ResultStore", "SCHEMA_VERSION", "dryrun_cell_subprocess"]

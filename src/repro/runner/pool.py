@@ -1,0 +1,358 @@
+"""Sharded process-pool dispatch for ``BenchmarkRunner.run_matrix``.
+
+``assign_shards`` partitions a selected scenario list into ``jobs`` shards
+keyed on ``Scenario.build_key()``: every scenario of one (arch, dtype,
+mode-overrides) lands on the same worker, so the per-worker arch-build and
+compiled-executable caches keep paying off exactly as they do in-process.
+Build-key groups are placed largest-first onto the least-loaded shard
+(LPT greedy), which is fully deterministic for a given scenario list.
+
+``ShardScheduler`` owns N *persistent* worker subprocesses
+(``python -m repro.runner.worker --serve``) that live across ``run()``
+calls — a regression-CI day's repeated nights keep their warm caches.
+Each worker receives its shard one JSONL request at a time over stdin and
+streams one JSONL result back per cell, so the parent collects results as
+they complete and a crash (OOM, kernel segfault, ...) costs exactly the
+in-flight cell: the dead worker is respawned and the shard's remaining
+cells continue.  Worker ``RunnerStats`` are fetched after every cell and
+delta-merged into the per-run stats, so model builds / compiles that
+happen out-of-process stay visible to the parent (only the stats of a cell
+that crashes its worker are lost with the process).
+
+Concurrent workers overlap their expensive phases (interpreter startup,
+model build, trace, XLA compile) but serialize the short timed loops on a
+shared *measurement fence* lock, so two cells' timed steps never overlap —
+the worst cross-worker distortion.  (Another worker's unfenced build or
+compile can still share the CPU with a fenced loop, so on heavily
+oversubscribed hosts prefer small probe cells where injected regressions
+dwarf the jitter; ``measure_fence=False`` opts out entirely for
+pure-throughput sweeps.)
+
+Regression hooks are forwarded as their plain parameters
+(``slowdown_s`` / ``leak_bytes``); custom ``RegressionHook`` subclasses
+with parent-process behaviour cannot cross the process boundary.
+"""
+from __future__ import annotations
+
+import json
+import os
+import select
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.runner.results import RunResult
+from repro.runner.scenario import Scenario
+
+
+def _src_dir() -> str:
+    import repro
+    pkg = (repro.__file__ and os.path.dirname(repro.__file__)) or \
+        list(repro.__path__)[0]
+    return os.path.dirname(os.path.abspath(pkg))
+
+
+def _subprocess_env() -> Dict[str, str]:
+    env = dict(os.environ)
+    src = _src_dir()
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return env
+
+
+#: relative cost guess per task for shard balancing (a train step runs
+#: fwd+bwd+update; decode is a single cached token) — only the ratios
+#: matter, and only for load balance, never for correctness
+_TASK_WEIGHT = {"train": 4, "infer_prefill": 2, "infer_decode": 1}
+
+
+def assign_shards(scenarios: Sequence[Scenario], jobs: int) -> List[List[int]]:
+    """Partition scenario *indices* into ``jobs`` shards by build_key.
+
+    Deterministic: scenarios of one build_key stay together (in input
+    order), groups are placed heaviest-first — group weight is the sum of
+    per-task cost weights, ties broken by first appearance — onto the
+    currently lightest shard (ties by shard index).  Shards may come back
+    empty when there are fewer groups than jobs.
+    """
+    jobs = max(1, int(jobs))
+    groups: Dict[Tuple, List[int]] = {}
+    weight: Dict[Tuple, int] = {}
+    order: List[Tuple] = []
+    for i, sc in enumerate(scenarios):
+        key = sc.build_key()
+        if key not in groups:
+            groups[key] = []
+            weight[key] = 0
+            order.append(key)
+        groups[key].append(i)
+        weight[key] += _TASK_WEIGHT.get(sc.task, 2)
+    shards: List[List[int]] = [[] for _ in range(jobs)]
+    load = [0] * jobs
+    # sorted() is stable, so equal-weight groups keep first-appearance order
+    ranked = sorted(order, key=lambda k: -weight[k])
+    for key in ranked:
+        target = min(range(jobs), key=lambda j: (load[j], j))
+        shards[target].extend(groups[key])
+        load[target] += weight[key]
+    return shards
+
+
+class _Worker:
+    """One persistent ``worker --serve`` subprocess + its protocol state."""
+
+    def __init__(self, idx: int, argv: List[str], env: Dict[str, str]):
+        self.idx = idx
+        self.argv = argv
+        self.env = env
+        self.proc: Optional[subprocess.Popen] = None
+        self.generation = 0          # bumped per spawn (stats-delta resets)
+        # cumulative worker stats already delta-merged by the parent; lives
+        # on the worker (NOT per run() call) because the process — and its
+        # monotonically growing counters — persists across run() calls
+        self.stats_seen: Dict[str, int] = {}
+        self.stats_gen = -1
+        self.stderr_path = ""
+        self._buf = b""
+
+    def ensure(self) -> subprocess.Popen:
+        if self.proc is None or self.proc.poll() is not None:
+            self._cleanup_stderr()
+            fd, self.stderr_path = tempfile.mkstemp(
+                suffix=".log", prefix=f"repro_shard{self.idx}_")
+            self.proc = subprocess.Popen(
+                self.argv, env=self.env, stdin=subprocess.PIPE,
+                stdout=subprocess.PIPE, stderr=fd, bufsize=0)
+            os.close(fd)
+            self._buf = b""
+            self.generation += 1
+        return self.proc
+
+    def send(self, msg: dict) -> None:
+        proc = self.ensure()
+        proc.stdin.write((json.dumps(msg) + "\n").encode())
+        proc.stdin.flush()
+
+    def recv(self, timeout: float) -> Optional[dict]:
+        """One protocol line, or None on EOF/timeout (worker dead/hung)."""
+        proc = self.proc
+        if proc is None or proc.stdout is None:
+            return None
+        deadline = time.monotonic() + timeout
+        while b"\n" not in self._buf:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                return None
+            ready, _, _ = select.select([proc.stdout], [], [], min(left, 1.0))
+            if not ready:
+                continue
+            chunk = os.read(proc.stdout.fileno(), 1 << 16)
+            if not chunk:
+                return None
+            self._buf += chunk
+        line, self._buf = self._buf.split(b"\n", 1)
+        return json.loads(line)
+
+    def stderr_tail(self, n: int = 500) -> str:
+        try:
+            with open(self.stderr_path, errors="replace") as f:
+                return f.read()[-n:]
+        except OSError:
+            return ""
+
+    def death_reason(self, timeout: float) -> str:
+        if self.proc is not None:
+            try:                 # give a just-died worker time to be reaped
+                self.proc.wait(0.5)
+            except subprocess.TimeoutExpired:
+                return (f"shard worker {self.idx} timed out "
+                        f"after {timeout:.0f}s")
+        code = self.proc.poll() if self.proc is not None else None
+        return (f"shard worker {self.idx} died (exit {code}): "
+                f"{self.stderr_tail()}")
+
+    def kill(self, grace: float = 0.0) -> None:
+        proc, self.proc = self.proc, None
+        if proc is not None:
+            try:
+                if proc.stdin:
+                    proc.stdin.close()      # EOF => clean worker exit
+            except OSError:
+                pass
+            if proc.poll() is None:
+                try:
+                    proc.wait(grace or 0.1)
+                except subprocess.TimeoutExpired:
+                    proc.terminate()
+                    try:
+                        proc.wait(5)
+                    except subprocess.TimeoutExpired:
+                        proc.kill()
+                        proc.wait()
+            if proc.stdout:
+                proc.stdout.close()
+        self._cleanup_stderr()
+        self._buf = b""
+
+    def _cleanup_stderr(self) -> None:
+        if self.stderr_path and os.path.exists(self.stderr_path):
+            try:
+                os.remove(self.stderr_path)
+            except OSError:
+                pass
+        self.stderr_path = ""
+
+
+class ShardScheduler:
+    """Dispatch scenario batches across persistent worker subprocesses."""
+
+    def __init__(self, jobs: int, *, runs: int = 5, warmup: int = 1,
+                 compile_warmup: int = 3, reuse: bool = True,
+                 measure_fence: bool = True, timeout: float = 1200.0):
+        if os.name != "posix":
+            # the protocol needs select()able pipes + flock; fail loudly
+            # instead of turning every cell into a "worker died" record
+            raise RuntimeError("sharded dispatch (jobs>1) requires a POSIX "
+                               "host; use the serial path (jobs=0)")
+        self.jobs = max(1, int(jobs))
+        self.timeout = timeout
+        argv = [sys.executable, "-m", "repro.runner.worker", "--serve",
+                "--runs", str(runs), "--warmup", str(warmup),
+                "--compile-warmup", str(compile_warmup)]
+        if not reuse:
+            argv.append("--no-reuse")
+        # measurement fence: builds/compiles overlap across workers, but
+        # the short timed loops serialize on a shared flock so no worker
+        # times its steps against another's CPU load — sharded numbers
+        # stay comparable with serial ones (see worker._run_cell)
+        self.measure_lock_path = ""
+        if measure_fence and reuse:
+            fd, self.measure_lock_path = tempfile.mkstemp(
+                suffix=".lock", prefix="repro_measure_")
+            os.close(fd)
+            argv += ["--measure-lock", self.measure_lock_path]
+        env = _subprocess_env()
+        self._workers = [_Worker(i, argv, env) for i in range(self.jobs)]
+        self._lock = threading.Lock()
+
+    # ---- lifecycle -------------------------------------------------------
+
+    def close(self) -> None:
+        for worker in self._workers:
+            worker.kill(grace=2.0)
+        if self.measure_lock_path and os.path.exists(self.measure_lock_path):
+            try:
+                os.remove(self.measure_lock_path)
+            except OSError:
+                pass
+
+    def __enter__(self) -> "ShardScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # ---- dispatch --------------------------------------------------------
+
+    def run(self, scenarios: Sequence[Scenario], *,
+            hooks: Optional[dict] = None,
+            runs: Optional[int] = None, warmup: Optional[int] = None,
+            on_result: Optional[Callable[[RunResult], None]] = None):
+        """Run every scenario, sharded by build_key; returns
+        ``(results_in_input_order, run_stats)`` where ``run_stats`` is a
+        ``RunnerStats`` of everything the workers did *during this call*.
+
+        ``on_result`` fires from worker-reader threads as cells complete
+        (the ResultStore append path is thread-safe for exactly this).
+        """
+        from repro.runner.runner import RunnerStats
+        shards = assign_shards(scenarios, self.jobs)
+        results: List[Optional[RunResult]] = [None] * len(scenarios)
+        run_stats = RunnerStats()
+        threads = []
+        for worker, idxs in zip(self._workers, shards):
+            if not idxs:
+                continue
+            t = threading.Thread(
+                target=self._drive,
+                args=(worker, idxs, scenarios, hooks or {}, runs, warmup,
+                      results, run_stats, on_result),
+                name=f"shard-{worker.idx}", daemon=True)
+            threads.append(t)
+            t.start()
+        for t in threads:
+            t.join()
+        return [r for r in results if r is not None], run_stats
+
+    def _drive(self, worker: _Worker, idxs: List[int],
+               scenarios: Sequence[Scenario], hooks: dict,
+               runs: Optional[int], warmup: Optional[int],
+               results: List[Optional[RunResult]], run_stats,
+               on_result: Optional[Callable[[RunResult], None]]) -> None:
+        """One worker's shard, sequentially; crashes cost one cell each."""
+        for idx in idxs:
+            sc = scenarios[idx]
+            t0 = time.perf_counter()
+            try:
+                worker.ensure()
+                if worker.generation != worker.stats_gen:
+                    worker.stats_gen = worker.generation
+                    worker.stats_seen = {}   # fresh interpreter: from zero
+                hook = hooks.get(sc.name) or hooks.get(sc.bench)
+                job = {"op": "run", "scenario": sc.to_dict(),
+                       "runs": runs, "warmup": warmup}
+                if hook is not None:
+                    job["hook"] = {
+                        "slowdown_s": getattr(hook, "slowdown_s", 0.0),
+                        "leak_bytes": getattr(hook, "leak_bytes", 0)}
+                rr, stats = self._round_trip(worker, job)
+            except Exception as e:  # noqa: BLE001 — e.g. spawn ENOMEM: the
+                rr, stats = None, None   # shard must keep emitting records
+                reason = f"shard worker {worker.idx} dispatch failed: {e!r}"
+            else:
+                reason = None if rr is not None else \
+                    worker.death_reason(self.timeout)
+            if rr is None:
+                worker.kill()
+                rr = RunResult.from_error(sc, reason,
+                                          wall_s=time.perf_counter() - t0)
+                with self._lock:
+                    run_stats.scenarios_run += 1
+                    run_stats.errors += 1
+            else:
+                rr.wall_s = time.perf_counter() - t0   # incl. dispatch
+                if stats:
+                    delta = {k: max(0, v - worker.stats_seen.get(k, 0))
+                             for k, v in stats.items()}
+                    worker.stats_seen = stats
+                    with self._lock:
+                        run_stats.merge(delta)
+            rr.extra["shard"] = worker.idx
+            rr.extra["isolated"] = True
+            results[idx] = rr
+            try:
+                if on_result is not None:
+                    on_result(rr)
+            except Exception:  # noqa: BLE001 — a failing store append must
+                pass           # not kill the shard; the result is returned
+
+    def _round_trip(self, worker: _Worker, job: dict):
+        """Send one job, read its result (which carries the worker's
+        cumulative stats); (None, None) when the worker dies or hangs."""
+        try:
+            worker.send(job)
+            msg = worker.recv(self.timeout)
+        except (OSError, ValueError):
+            return None, None
+        if not msg or msg.get("op") != "result":
+            return None, None
+        return RunResult.from_dict(msg["result"]), msg.get("stats")

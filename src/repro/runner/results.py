@@ -16,6 +16,17 @@
     error        str?   exception text when status == "error"
     extra        dict   free-form payload (dry-run cells, hook params, ...)
 
+Well-known ``extra`` keys written by the runner (still schema v1 — readers
+must tolerate their absence):
+
+    extra["isolated"]      bool   measured in a worker subprocess
+                                  (``isolate=True`` or sharded dispatch)
+    extra["shard"]         int    worker index that ran this scenario under
+                                  sharded dispatch (``run_matrix(jobs=N)``)
+    extra["worker_stats"]  dict   the isolated worker's ``RunnerStats``
+                                  snapshot (model builds / compiles that
+                                  happened out-of-process)
+
 ``ResultStore`` — the persistence layer:
 
     * an append-only JSONL run log (full history, one record per line);
@@ -25,14 +36,27 @@ Two layouts: a directory (``<root>/runs.jsonl`` + ``<root>/latest.json``,
 the runner's layout) or a ``*.json`` file path (the latest pointer IS that
 file, log beside it as ``*.jsonl`` — the layout ``core.regression.MetricStore``
 sits on, keeping its historical single-file format readable).
+
+Concurrency: one store file set may be appended to by several processes at
+once (the sharded ``run_matrix`` path records from parent threads while CI
+sweeps in other processes share the same store).  Log appends are a single
+``O_APPEND`` write, the latest pointer is advanced under an exclusive lock
+file with a read-merge-replace cycle, and ``history()`` skips (and counts)
+torn lines left by a writer killed mid-append.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import threading
 import time
 from typing import Any, Dict, Iterator, List, Optional
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: fall back to best-effort updates
+    fcntl = None  # type: ignore[assignment]
 
 SCHEMA_VERSION = 1
 
@@ -102,7 +126,8 @@ class RunResult:
 
 
 class ResultStore:
-    """JSONL run log + latest-pointer map, atomic on update."""
+    """JSONL run log + latest-pointer map, atomic on update and safe for
+    concurrent appenders (threads in one process AND separate processes)."""
 
     def __init__(self, path: str):
         if path.endswith(".json"):
@@ -113,6 +138,10 @@ class ResultStore:
             os.makedirs(path, exist_ok=True)
             self.latest_path = os.path.join(path, "latest.json")
             self.log_path = os.path.join(path, "runs.jsonl")
+        self.lock_path = self.latest_path + ".lock"
+        #: torn/corrupt log lines skipped by the last ``history()`` replay
+        self.corrupt_lines = 0
+        self._tlock = threading.Lock()
         self.latest: Dict[str, dict] = {}
         if os.path.exists(self.latest_path):
             with open(self.latest_path) as f:
@@ -124,29 +153,70 @@ class ResultStore:
         rec = record.to_dict() if hasattr(record, "to_dict") else dict(record)
         rec.setdefault("schema", SCHEMA_VERSION)
         rec.setdefault("ts", time.time())
-        with open(self.log_path, "a") as f:
-            f.write(json.dumps(rec) + "\n")
-        self.latest[rec["name"]] = rec
-        tmp = self.latest_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.latest, f, indent=1)
-        os.replace(tmp, self.latest_path)
+        # one O_APPEND write syscall per record: concurrent appenders never
+        # interleave bytes within a line
+        line = (json.dumps(rec) + "\n").encode()
+        fd = os.open(self.log_path, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                     0o644)
+        try:
+            os.write(fd, line)
+        finally:
+            os.close(fd)
+        self._advance_latest(rec)
         return rec
+
+    def _advance_latest(self, rec: dict) -> None:
+        """Move the latest pointer under an exclusive lock, merging with
+        whatever other writers put on disk since we last read it."""
+        with self._tlock:
+            lock_fd = os.open(self.lock_path,
+                              os.O_WRONLY | os.O_CREAT, 0o644)
+            try:
+                if fcntl is not None:
+                    fcntl.flock(lock_fd, fcntl.LOCK_EX)
+                disk: Dict[str, dict] = {}
+                if os.path.exists(self.latest_path):
+                    try:
+                        with open(self.latest_path) as f:
+                            disk = json.load(f)
+                    except ValueError:
+                        disk = {}
+                merged = {**self.latest, **disk}
+                merged[rec["name"]] = rec
+                self.latest = merged
+                tmp = f"{self.latest_path}.{os.getpid()}.tmp"
+                with open(tmp, "w") as f:
+                    json.dump(merged, f, indent=1)
+                os.replace(tmp, self.latest_path)
+            finally:
+                os.close(lock_fd)
 
     def latest_result(self, name: str) -> Optional[RunResult]:
         rec = self.latest.get(name)
         return None if rec is None else RunResult.from_dict(rec)
 
     def history(self, name: Optional[str] = None) -> Iterator[dict]:
-        """Replay the append log (optionally filtered to one scenario)."""
+        """Replay the append log (optionally filtered to one scenario).
+
+        Torn/truncated lines — a writer killed mid-append, a partial tail
+        from a crash — are skipped, not fatal; ``self.corrupt_lines`` holds
+        the count from the latest replay."""
+        self.corrupt_lines = 0
         if not os.path.exists(self.log_path):
             return
-        with open(self.log_path) as f:
+        with open(self.log_path, errors="replace") as f:
             for line in f:
                 line = line.strip()
                 if not line:
                     continue
-                rec = json.loads(line)
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    self.corrupt_lines += 1
+                    continue
+                if not isinstance(rec, dict):
+                    self.corrupt_lines += 1
+                    continue
                 if name is None or rec.get("name") == name:
                     yield rec
 

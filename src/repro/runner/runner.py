@@ -34,23 +34,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.harness import (Measurement, RegressionHook, measure,
                                 measure_eager, prepare)
 from repro.core.suite import Benchmark, Built, build_arch, get_benchmark
+from repro.runner.pool import ShardScheduler, _subprocess_env
 from repro.runner.results import ResultStore, RunResult
 from repro.runner.scenario import Scenario, ScenarioMatrix, select_scenarios
-
-
-def _src_dir() -> str:
-    import repro
-    pkg = (repro.__file__ and os.path.dirname(repro.__file__)) or \
-        list(repro.__path__)[0]
-    return os.path.dirname(os.path.abspath(pkg))
-
-
-def _subprocess_env() -> Dict[str, str]:
-    env = dict(os.environ)
-    src = _src_dir()
-    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
-                               if env.get("PYTHONPATH") else "")
-    return env
 
 
 @dataclasses.dataclass
@@ -67,6 +53,15 @@ class RunnerStats:
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def merge(self, other) -> "RunnerStats":
+        """Field-wise add another stats snapshot (RunnerStats or dict) —
+        how worker-subprocess counts become visible in the parent."""
+        d = other.to_dict() if isinstance(other, RunnerStats) else dict(other or {})
+        for f in dataclasses.fields(self):
+            if d.get(f.name):
+                setattr(self, f.name, getattr(self, f.name) + int(d[f.name]))
+        return self
+
 
 @dataclasses.dataclass
 class _ExecEntry:
@@ -79,7 +74,8 @@ class _ExecEntry:
 class BenchmarkRunner:
     def __init__(self, store: Optional[ResultStore] = None, *,
                  runs: int = 5, warmup: int = 1, compile_warmup: int = 3,
-                 reuse: bool = True, isolate: bool = False):
+                 reuse: bool = True, isolate: bool = False, jobs: int = 0,
+                 measure_fence: bool = True):
         self.store = store
         self.runs = runs
         self.warmup = warmup
@@ -90,6 +86,12 @@ class BenchmarkRunner:
         self.compile_warmup = compile_warmup
         self.reuse = reuse
         self.isolate = isolate
+        # default shard count for run_matrix (CLI --jobs); <=1 means the
+        # serial in-process path.  measure_fence serializes the workers'
+        # timed loops (comparable per-cell numbers, what regression CI
+        # wants); throughput-only sweeps may turn it off
+        self.jobs = jobs
+        self.measure_fence = measure_fence
         # session-level scenario selection (the CLI --filter/--exclude
         # regexes), applied on top of each matrix's own selection
         self.default_filter: Tuple[str, ...] = ()
@@ -100,6 +102,19 @@ class BenchmarkRunner:
         self._built: Dict[Tuple, Built] = {}
         self._execs: Dict[Scenario, _ExecEntry] = {}
         self._dryrun_mem: Dict[str, dict] = {}
+        self._pool: Optional[ShardScheduler] = None
+
+    def close(self) -> None:
+        """Shut down the persistent shard workers (no-op when serial)."""
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # ---- build / executable caches -------------------------------------
 
@@ -197,14 +212,51 @@ class BenchmarkRunner:
     def run_matrix(self, matrix: ScenarioMatrix, *,
                    hooks: Optional[Dict[str, RegressionHook]] = None,
                    runs: Optional[int] = None,
-                   warmup: Optional[int] = None) -> List[RunResult]:
+                   warmup: Optional[int] = None,
+                   jobs: Optional[int] = None) -> List[RunResult]:
         """Run every scenario of the matrix; hooks are keyed by benchmark
-        name ("arch/task") or full scenario name."""
+        name ("arch/task") or full scenario name.
+
+        ``jobs=N`` (default: the runner's ``jobs`` setting) shards the
+        selected scenarios across N persistent worker subprocesses, grouped
+        by build_key so each worker keeps its caches hot (see
+        ``repro.runner.pool``); results come back in matrix order with
+        ``extra["shard"]`` set.  ``jobs<=1`` is the serial in-process path.
+        """
+        scenarios = self.select(matrix)
+        jobs = self.jobs if jobs is None else jobs
+        if jobs and jobs > 1 and scenarios:
+            # even a single selected cell goes through the pool: the caller
+            # opted into worker fault containment and shard metadata
+            return self._run_sharded(scenarios, hooks=hooks, runs=runs,
+                                     warmup=warmup, jobs=jobs)
         out = []
-        for sc in self.select(matrix):
+        for sc in scenarios:
             hook = (hooks or {}).get(sc.name) or (hooks or {}).get(sc.bench)
             out.append(self.run(sc, hook=hook, runs=runs, warmup=warmup))
         return out
+
+    def _run_sharded(self, scenarios: List[Scenario], *,
+                     hooks: Optional[Dict[str, RegressionHook]],
+                     runs: Optional[int], warmup: Optional[int],
+                     jobs: int) -> List[RunResult]:
+        """Dispatch a scenario batch to the persistent shard pool; the pool
+        (and its workers' warm caches) lives until ``close()``."""
+        if self._pool is not None and self._pool.jobs != jobs:
+            self._pool.close()
+            self._pool = None
+        if self._pool is None:
+            self._pool = ShardScheduler(jobs, runs=self.runs,
+                                        warmup=self.warmup,
+                                        compile_warmup=self.compile_warmup,
+                                        reuse=self.reuse,
+                                        measure_fence=self.measure_fence)
+        record = self.store.append if self.store is not None else None
+        results, run_stats = self._pool.run(scenarios, hooks=hooks,
+                                            runs=runs, warmup=warmup,
+                                            on_result=record)
+        self.stats.merge(run_stats)
+        return results
 
     # ---- subprocess isolation -------------------------------------------
 
@@ -214,16 +266,24 @@ class BenchmarkRunner:
                       warmup: Optional[int] = None,
                       record: bool = True, timeout: int = 1200) -> RunResult:
         """One scenario in its own interpreter: a crash (OOM, segfault in a
-        kernel, ...) becomes an error record instead of killing the sweep."""
+        kernel, ...) becomes an error record instead of killing the sweep.
+
+        The full measurement config (runs/warmup/compile-warmup/reuse) is
+        forwarded so the isolated measurement follows the same protocol as
+        the in-process path (comparable as a regression baseline), and the
+        worker's ``RunnerStats`` come back in the payload and are merged —
+        out-of-process builds/compiles count like in-process ones."""
         t0 = time.perf_counter()
-        self.stats.scenarios_run += 1
         fd, out = tempfile.mkstemp(suffix=".json", prefix="repro_runner_")
         os.close(fd)
         cmd = [sys.executable, "-m", "repro.runner.worker",
                "--scenario", json.dumps(scenario.to_dict()),
                "--runs", str(runs or self.runs),
                "--warmup", str(self.warmup if warmup is None else warmup),
+               "--compile-warmup", str(self.compile_warmup),
                "--json", out]
+        if not self.reuse:
+            cmd.append("--no-reuse")
         if hook is not None:
             cmd += ["--slowdown-s", str(hook.slowdown_s),
                     "--leak-bytes", str(hook.leak_bytes)]
@@ -232,15 +292,21 @@ class BenchmarkRunner:
                                text=True, timeout=timeout)
             if r.returncode == 0 and os.path.getsize(out):
                 with open(out) as f:
-                    rr = RunResult.from_dict(json.load(f))
+                    payload = json.load(f)
+                rr = RunResult.from_dict(payload["result"])
+                worker_stats = payload.get("stats") or {}
                 rr.wall_s = time.perf_counter() - t0
                 rr.extra["isolated"] = True
+                rr.extra["worker_stats"] = worker_stats
+                self.stats.merge(worker_stats)
             else:
+                self.stats.scenarios_run += 1
                 self.stats.errors += 1
                 rr = RunResult.from_error(
                     scenario, f"worker exit {r.returncode}: {r.stderr[-500:]}",
                     wall_s=time.perf_counter() - t0)
         except subprocess.TimeoutExpired:
+            self.stats.scenarios_run += 1
             self.stats.errors += 1
             rr = RunResult.from_error(scenario, f"worker timeout after {timeout}s",
                                       wall_s=time.perf_counter() - t0)

@@ -109,6 +109,11 @@ class ScenarioMatrix:
     * ``skip``    — exact names: a full scenario name, a benchmark name
       ("arch/task"), or a bare arch (the torchbench SKIP-set idiom for
       known-broken models).
+
+    Expansion (the cartesian product AND the regex selection) is memoized
+    on the current field values — ``len(m)`` / ``for s in m`` / nested
+    ``m.expand()`` calls pay for one expansion, and editing any field
+    invalidates the cache.
     """
     archs: Sequence[str]
     tasks: Sequence[str] = TASKS
@@ -120,7 +125,15 @@ class ScenarioMatrix:
     exclude: Sequence[str] = ()
     skip: Sequence[str] = ()
 
-    def expand(self) -> List[Scenario]:
+    def _fields_key(self) -> Tuple:
+        return tuple(tuple(getattr(self, f.name))
+                     for f in dataclasses.fields(self))
+
+    def _expanded(self) -> List[Scenario]:
+        key = self._fields_key()
+        cached = getattr(self, "_expand_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
         skip = set(self.skip)
         out: List[Scenario] = []
         for arch, task, batch, seq, dtype, mode in itertools.product(
@@ -131,10 +144,15 @@ class ScenarioMatrix:
             if {s.name, s.bench, s.arch} & skip:
                 continue
             out.append(s)
-        return select_scenarios(out, self.filter, self.exclude)
+        out = select_scenarios(out, self.filter, self.exclude)
+        self._expand_cache = (key, out)
+        return out
+
+    def expand(self) -> List[Scenario]:
+        return list(self._expanded())   # callers may mutate their copy
 
     def __iter__(self):
-        return iter(self.expand())
+        return iter(self._expanded())
 
     def __len__(self) -> int:
-        return len(self.expand())
+        return len(self._expanded())

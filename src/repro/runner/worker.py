@@ -1,44 +1,181 @@
 """Subprocess worker for isolated scenario execution.
 
+Single-shot mode (``BenchmarkRunner(isolate=True)``):
+
     python -m repro.runner.worker --scenario '{"arch": "gemma-2b", ...}' \
-        --runs 3 --json out.json [--slowdown-s S --leak-bytes N]
+        --runs 3 --warmup 1 --compile-warmup 3 --json out.json \
+        [--no-reuse] [--slowdown-s S --leak-bytes N]
 
 Runs ONE scenario in this interpreter via an in-process BenchmarkRunner and
-writes its RunResult JSON to ``--json``.  The parent (``BenchmarkRunner``
-with ``isolate=True``) treats a crash/timeout of this process as an error
+writes ``{"result": <RunResult>, "stats": <RunnerStats>}`` JSON to
+``--json``.  The parent treats a crash/timeout of this process as an error
 record — fault containment per cell, the ``launch/dryrun`` subprocess idiom.
+The full runner measurement config (runs/warmup/compile-warmup/reuse) is
+forwarded on the command line so isolated measurements stay comparable with
+in-process ones as regression baselines, and the worker's ``RunnerStats``
+ride back in the payload so out-of-process builds/compiles stay visible.
+
+Serve mode (``run_matrix(..., jobs=N)`` sharded dispatch, see
+``repro.runner.pool``):
+
+    python -m repro.runner.worker --serve --runs 3 --warmup 1 ...
+
+A persistent interpreter processing a *batch* of scenarios: one JSONL
+request per line on stdin —
+
+    {"op": "run", "scenario": {...}, "runs": R?, "warmup": W?,
+     "hook": {"slowdown_s": S, "leak_bytes": N}?}
+
+— one JSONL reply per request on stdout (``{"op": "result", "result": ...,
+"stats": ...}``, the cumulative RunnerStats riding along with every
+result), exiting 0 on stdin EOF.  The protocol
+stream is the *original* stdout fd, dup'd away before any benchmark code
+runs; fd 1 is then pointed at stderr so stray prints from model/measure
+code can never corrupt the protocol.  One BenchmarkRunner serves the whole
+batch, so the arch-build and compiled-executable caches keep paying off
+across the shard's scenarios exactly as they do in-process.
+
+``--measure-lock PATH`` enables the *measurement fence*: each cell first
+does an unfenced warm pass (build + compile + donation threading — the
+expensive, contention-tolerant work, free to overlap with other workers),
+then takes an exclusive flock on PATH for the short timed loop only.
+Two cells' timed loops therefore never overlap — the worst cross-worker
+distortion — keeping sharded measurements usable as regression baselines
+(see ``runner/pool.py`` for what the fence can and cannot isolate).
+The fenced re-measure reports the warm pass's
+compile_us/cache provenance and counts as ONE logical execution in
+``RunnerStats``.  Requires the cache (ignored under ``--no-reuse``).
+
 The regression-hook parameters are plain numbers so injected-fault CI runs
-can be isolated too.
+can be isolated/sharded too.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import os
+import sys
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: fence degrades to unfenced runs
+    fcntl = None  # type: ignore[assignment]
+
+
+@contextlib.contextmanager
+def _file_lock(path):
+    if not path or fcntl is None:
+        yield
+        return
+    fd = os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        os.close(fd)
+
+
+def _build_runner(args):
+    from repro.runner.runner import BenchmarkRunner
+    return BenchmarkRunner(runs=args.runs, warmup=args.warmup,
+                           compile_warmup=args.compile_warmup,
+                           reuse=args.reuse)
+
+
+def _hook_from(slowdown_s: float, leak_bytes: int):
+    if not (slowdown_s or leak_bytes):
+        return None
+    from repro.core.harness import RegressionHook
+    return RegressionHook(slowdown_s=slowdown_s, leak_bytes=leak_bytes)
+
+
+def _run_cell(runner, scenario, hook, runs, warmup, lock_path):
+    """One cell, with the measurement fence when a lock path is given:
+    warm pass unfenced (build/compile/threading overlap across workers),
+    timed loop under the exclusive lock (contention-free measurement)."""
+    if not (lock_path and runner.reuse):
+        return runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
+                          record=False)
+    warm = runner.run(scenario, runs=1, warmup=0, record=False)
+    if warm.status != "ok":
+        return warm
+    with _file_lock(lock_path):
+        rr = runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
+                        record=False)
+    if rr.status == "ok":
+        # the fenced re-measure hit the warm pass's cache: report the
+        # cell's true build/compile provenance instead
+        rr.compile_us = warm.compile_us
+        rr.cache = warm.cache
+    # keep the ledger at one logical execution per cell — the warm pass
+    # is protocol, not workload
+    runner.stats.scenarios_run -= 1
+    runner.stats.executable_cache_hits -= 1
+    return rr
+
+
+def _serve(args) -> int:
+    """Persistent batch loop: JSONL requests on stdin, replies on the
+    original stdout; workload output is rerouted to stderr."""
+    proto = os.fdopen(os.dup(sys.stdout.fileno()), "w", buffering=1)
+    os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
+
+    from repro.runner.scenario import Scenario
+
+    runner = _build_runner(args)
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        msg = json.loads(line)
+        scenario = Scenario.from_dict(msg["scenario"])
+        hook_params = msg.get("hook") or {}
+        hook = _hook_from(hook_params.get("slowdown_s", 0.0),
+                          hook_params.get("leak_bytes", 0))
+        rr = _run_cell(runner, scenario, hook, msg.get("runs"),
+                       msg.get("warmup"), args.measure_lock)
+        # cumulative stats ride along with every result: one round trip
+        # per cell, and no window where a completed cell's builds/compiles
+        # can be lost to a dying worker
+        reply = {"op": "result", "result": rr.to_dict(),
+                 "stats": runner.stats.to_dict()}
+        proto.write(json.dumps(reply) + "\n")
+        proto.flush()
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", required=True, help="Scenario JSON dict")
+    ap.add_argument("--scenario", help="Scenario JSON dict (single-shot mode)")
+    ap.add_argument("--serve", action="store_true",
+                    help="batch mode: JSONL requests on stdin, replies on stdout")
     ap.add_argument("--runs", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--compile-warmup", type=int, default=3,
+                    help="extra warmup after a fresh compile (parent's setting)")
+    ap.add_argument("--no-reuse", dest="reuse", action="store_false",
+                    default=True, help="disable build/executable caching")
+    ap.add_argument("--measure-lock", default="",
+                    help="flock path fencing the timed loop (serve mode)")
     ap.add_argument("--slowdown-s", type=float, default=0.0)
     ap.add_argument("--leak-bytes", type=int, default=0)
-    ap.add_argument("--json", required=True)
+    ap.add_argument("--json", help="output path (single-shot mode)")
     args = ap.parse_args(argv)
 
-    from repro.core.harness import RegressionHook
-    from repro.runner.runner import BenchmarkRunner
+    if args.serve:
+        return _serve(args)
+    if not (args.scenario and args.json):
+        ap.error("single-shot mode needs --scenario and --json (or use --serve)")
+
     from repro.runner.scenario import Scenario
 
     scenario = Scenario.from_dict(json.loads(args.scenario))
-    hook = None
-    if args.slowdown_s or args.leak_bytes:
-        hook = RegressionHook(slowdown_s=args.slowdown_s,
-                              leak_bytes=args.leak_bytes)
-    runner = BenchmarkRunner(runs=args.runs, warmup=args.warmup)
-    rr = runner.run(scenario, hook=hook, record=False)
+    runner = _build_runner(args)
+    rr = runner.run(scenario, hook=_hook_from(args.slowdown_s, args.leak_bytes),
+                    record=False)
     with open(args.json, "w") as f:
-        json.dump(rr.to_dict(), f)
+        json.dump({"result": rr.to_dict(), "stats": runner.stats.to_dict()}, f)
     return 0
 
 

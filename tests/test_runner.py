@@ -1,16 +1,20 @@
 """The unified BenchmarkRunner subsystem: scenario-matrix expansion
-(filter/exclude/skip), ResultStore round-trips, build/executable reuse
-accounting, donation threading, and regression detection driven through the
-store-backed MetricStore."""
+(filter/exclude/skip), ResultStore round-trips (incl. concurrent appenders
+and torn-line recovery), build/executable reuse accounting, donation
+threading, sharded process-pool dispatch, and regression detection driven
+through the store-backed MetricStore."""
 import json
+import subprocess
+import sys
 
 import jax.numpy as jnp
 import pytest
 
 from repro.core.harness import RegressionHook, measure
 from repro.core.regression import MetricStore, detect
-from repro.runner import (BenchmarkRunner, ResultStore, RunResult, Scenario,
-                          ScenarioMatrix)
+from repro.runner import (BenchmarkRunner, ResultStore, RunResult, RunnerStats,
+                          Scenario, ScenarioMatrix, ShardScheduler,
+                          assign_shards)
 
 
 # ---- scenario matrix ------------------------------------------------------
@@ -54,6 +58,129 @@ def test_runner_session_filter():
     assert [s.task for s in r.select(m)] == ["train"]
 
 
+def test_matrix_expansion_is_memoized(monkeypatch):
+    """__len__/__iter__/expand share one cached expansion until a field
+    changes (the product + regex selection used to re-run every call)."""
+    import repro.runner.scenario as scenario_mod
+    calls = {"n": 0}
+    real = scenario_mod.select_scenarios
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(scenario_mod, "select_scenarios", counting)
+    m = ScenarioMatrix(archs=["a1", "a2"], tasks=("train",), filter=[r"a\d"])
+    first = m.expand()
+    assert len(m) == 2 and list(m) == first and m.expand() == first
+    assert calls["n"] == 1
+    # mutating a field invalidates the cache
+    m.archs = ["a1"]
+    assert len(m) == 1
+    assert calls["n"] == 2
+    # expand() hands out copies: callers can't poison the cache
+    m.expand().clear()
+    assert len(m) == 1
+
+
+# ---- sharded dispatch -----------------------------------------------------
+
+def test_assign_shards_deterministic_by_build_key():
+    scs = [Scenario(arch=a, task=t, batch=1, seq=8, dtype=d)
+           for a in ("a1", "a2", "a3")
+           for d in ("fp32", "bf16")
+           for t in ("train", "infer_decode")]
+    shards = assign_shards(scs, 2)
+    # deterministic: same input, same partition
+    assert shards == assign_shards(list(scs), 2)
+    # complete and disjoint
+    assert sorted(i for s in shards for i in s) == list(range(len(scs)))
+    # all scenarios of one build_key land on one shard
+    for key in {sc.build_key() for sc in scs}:
+        owners = {j for j, shard in enumerate(shards)
+                  for i in shard if scs[i].build_key() == key}
+        assert len(owners) == 1, (key, owners)
+    # more jobs than groups leaves the surplus shards empty, loses nothing
+    wide = assign_shards(scs[:2], 4)
+    assert sorted(i for s in wide for i in s) == [0, 1]
+    assert sum(bool(s) for s in wide) == 1   # one build_key -> one worker
+
+
+def test_runner_stats_merge():
+    a = RunnerStats(model_builds=1, scenarios_run=2, errors=1)
+    a.merge({"model_builds": 2, "executable_builds": 3, "bogus_key": 9})
+    a.merge(RunnerStats(scenarios_run=1))
+    assert a.model_builds == 3 and a.executable_builds == 3
+    assert a.scenarios_run == 3 and a.errors == 1
+
+
+def test_shard_worker_crash_becomes_error_records():
+    """A dying worker costs its in-flight cell (error record), not the
+    sweep: the scheduler respawns it for the shard's remaining cells."""
+    sched = ShardScheduler(2, runs=1, warmup=0)
+    try:
+        for w in sched._workers:   # doomed stand-in for a crashy worker
+            w.argv = [sys.executable, "-c",
+                      "import sys; sys.stdin.readline(); sys.exit(7)"]
+        scs = [Scenario(arch="gemma-2b", task="train", batch=1, seq=8),
+               Scenario(arch="gemma-2b", task="train", batch=1, seq=8,
+                        dtype="bf16")]
+        results, stats = sched.run(scs)
+    finally:
+        sched.close()
+    assert [r.status for r in results] == ["error", "error"]
+    assert all("exit 7" in r.error for r in results)
+    assert {r.extra["shard"] for r in results} == {0, 1}
+    assert stats.scenarios_run == 2 and stats.errors == 2
+
+
+def test_sharded_matrix_matches_serial(tmp_path):
+    """jobs=2 returns the same scenario set/statuses as the serial path,
+    merges worker stats into the parent, and records shard metadata."""
+    m = ScenarioMatrix(archs=["gemma-2b"], tasks=("train",),
+                       batches=(1,), seqs=(8,), dtypes=("fp32", "bf16"))
+    serial = BenchmarkRunner(runs=1, warmup=0)
+    serial_rrs = serial.run_matrix(m)
+
+    store = ResultStore(str(tmp_path / "s"))
+    sharded = BenchmarkRunner(store=store, runs=1, warmup=0, jobs=2)
+    try:
+        shard_rrs = sharded.run_matrix(m)
+        rerun = sharded.run_matrix(m)   # same persistent pool, warm caches
+    finally:
+        sharded.close()
+
+    assert [(r.name, r.status) for r in shard_rrs] == \
+        [(r.name, r.status) for r in serial_rrs]
+    assert all(r.status == "ok" and r.median_us > 0 for r in shard_rrs)
+    # one build_key per dtype -> one worker each, results in matrix order
+    assert {r.extra["shard"] for r in shard_rrs} == {0, 1}
+    assert all(r.extra["isolated"] for r in shard_rrs)
+    # worker builds/compiles are visible in the parent's merged stats;
+    # the second run_matrix hit the persistent workers' caches (no new
+    # builds) and merged only the DELTA, not the cumulative worker
+    # counters again
+    assert all(r.status == "ok" for r in rerun)
+    assert sharded.stats.model_builds == 2
+    assert sharded.stats.executable_builds == 2
+    assert sharded.stats.executable_cache_hits == 2
+    assert sharded.stats.scenarios_run == 4 and sharded.stats.errors == 0
+    # every cell landed in the store from the worker-reader threads
+    assert len(list(store.history())) == 4
+
+
+def test_isolated_run_propagates_worker_stats(tmp_path):
+    """isolate=True merges the worker's RunnerStats and ships them in
+    extra["worker_stats"] (out-of-process builds used to be invisible)."""
+    r = BenchmarkRunner(store=ResultStore(str(tmp_path / "s")),
+                        runs=1, warmup=0, isolate=True)
+    rr = r.run(Scenario(arch="gemma-2b", task="train", batch=1, seq=8))
+    assert rr.status == "ok" and rr.extra["isolated"]
+    assert rr.extra["worker_stats"]["model_builds"] == 1
+    assert r.stats.model_builds == 1 and r.stats.scenarios_run == 1
+    assert r.stats.errors == 0
+
+
 # ---- result store ---------------------------------------------------------
 
 def test_result_store_roundtrip_and_latest_pointer(tmp_path):
@@ -90,6 +217,46 @@ def test_metric_store_on_result_store(tmp_path):
     issues = detect(store2, "bench/a", {"median_us": 130.0})
     assert len(issues) == 1 and issues[0].increase > 0.07
     assert store2.baseline("missing") is None
+
+
+def test_result_store_skips_corrupt_jsonl_lines(tmp_path):
+    """A torn/truncated log line (writer killed mid-append) must not abort
+    the history replay — skip and count it."""
+    store = ResultStore(str(tmp_path / "store"))
+    store.append({"name": "a", "median_us": 1.0})
+    with open(store.log_path, "a") as f:
+        f.write('{"name": "torn", "median_us": 2.\n')   # killed mid-write
+        f.write("[1, 2, 3]\n")                          # non-record JSON
+    store.append({"name": "b", "median_us": 3.0})
+    replay = list(store.history())
+    assert [r["name"] for r in replay] == ["a", "b"]
+    assert store.corrupt_lines == 2
+
+
+def test_result_store_concurrent_append_two_processes(tmp_path):
+    """Two processes appending to one store: every log line stays intact
+    (single O_APPEND writes) and the latest pointer merges both writers."""
+    path = str(tmp_path / "store")
+    ResultStore(path)   # create the layout up front
+    script = (
+        "import sys\n"
+        "from repro.runner import ResultStore\n"
+        "store = ResultStore(sys.argv[1])\n"
+        "tag = sys.argv[2]\n"
+        "for i in range(20):\n"
+        "    store.append({'name': f'{tag}/{i}', 'median_us': float(i)})\n"
+    )
+    from repro.runner.pool import _subprocess_env
+    procs = [subprocess.Popen([sys.executable, "-c", script, path, tag],
+                              env=_subprocess_env())
+             for tag in ("w1", "w2")]
+    for p in procs:
+        assert p.wait(timeout=60) == 0
+    fresh = ResultStore(path)
+    replay = list(fresh.history())
+    assert len(replay) == 40 and fresh.corrupt_lines == 0
+    assert len(fresh.latest) == 40
+    assert {r["name"] for r in replay} == set(fresh.latest)
 
 
 # ---- execution + reuse ----------------------------------------------------
