@@ -16,13 +16,18 @@ ARCHS_FULL = ["gemma-2b", "mixtral-8x7b", "mamba2-2.7b", "recurrentgemma-9b",
 ARCHS_FAST = ["gemma-2b", "mamba2-2.7b"]
 
 
-def main(fast: bool = False, runner=None) -> None:
-    runner = runner or make_runner()
+def scenario_matrices(fast: bool = False):
+    """The matrices this figure executes (``benchmarks.run --list`` hook)."""
     archs = ARCHS_FAST if fast else ARCHS_FULL
     modes = ("eager", "jit", "jit_donated") if fast else \
             ("eager", "jit", "jit_donated", "jit_unrolled", "jit_noremat")
-    matrix = ScenarioMatrix(archs=archs, tasks=("train",), batches=(2,),
-                            seqs=(48,), modes=modes)
+    return [ScenarioMatrix(archs=archs, tasks=("train",), batches=(2,),
+                           seqs=(48,), modes=modes)]
+
+
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
+    [matrix] = scenario_matrices(fast)
     results = {}
     for rr in runner.run_matrix(matrix, runs=3):
         if rr.status != "ok":

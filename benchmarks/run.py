@@ -2,7 +2,11 @@
 executed through the unified ``repro.runner.BenchmarkRunner``.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
-        [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N]
+        [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N] [--list]
+
+``--list`` prints the scenario names each matrix-driven table would run
+(after filter/exclude/skip selection) and exits without executing —
+cheap debugging for sharded sweeps.
 
 One ``BenchmarkRunner`` + ``ResultStore`` (``results/store``) is shared by
 every table: arch builds, compiled executables, and dry-run cells are
@@ -31,6 +35,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduced sweep for CI")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print the selected scenario names (post "
+                         "filter/exclude/skip) without executing anything")
     ap.add_argument("--filter", action="append", default=[],
                     help="regex over scenario names; keep matches")
     ap.add_argument("--exclude", action="append", default=[],
@@ -45,7 +52,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (batchsize, fig5_hardware, fig12_breakdown,
                             fig34_compilers, roofline, runner_bench,
-                            table1_suite, table45_ci)
+                            serve_latency, table1_suite, table45_ci)
     from benchmarks.common import make_runner
     runner = make_runner(isolate=args.isolate, jobs=args.jobs)
     runner.default_filter = tuple(args.filter)
@@ -59,8 +66,26 @@ def main(argv=None) -> int:
         "table45_ci": table45_ci.main,             # §4.2, Tables 4-5
         "batchsize": batchsize.main,               # §2.2 batch-size search
         "roofline": roofline.main,                 # §Roofline deliverable
+        "serve_latency": serve_latency.main,       # serving-latency table
         "runner_bench": runner_bench.main,         # runner reuse speedup
     }
+    if args.list:
+        # sharded-sweep debugging: show exactly which cells each table's
+        # matrices select under the session --filter/--exclude, zero
+        # execution.  Tables without a scenario_matrices hook (dry-run /
+        # single-probe tables) are reported as such.
+        for name, fn in tables.items():
+            if args.only and name != args.only:
+                continue
+            mod = sys.modules[fn.__module__]
+            hook = getattr(mod, "scenario_matrices", None)
+            if hook is None:
+                print(f"# {name}: no scenario matrix (dry-run or probe cells)")
+                continue
+            for matrix in hook(fast=args.fast):
+                for sc in runner.select(matrix):
+                    print(f"{name} {sc.name}")
+        return 0
     failed = 0
     try:
         for name, fn in tables.items():

@@ -29,6 +29,11 @@ capacity, so we probe that too (``parallel_capacity``: aggregate
 throughput of N busy processes vs 1 — ~1.1 on a hyperthread pair, ~N on N
 real cores) and report it alongside.
 
+Part 3 — serve throughput: one small continuous-batching cell per sweep
+arch (``task="serve"``, bursty trace) dispatched through the same sharded
+pool, reporting tok/s per cell and the sweep wall next to the
+serial/isolated/sharded walls.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -113,6 +118,19 @@ def _sweep_matrix(fast: bool) -> ScenarioMatrix:
                           batches=(BATCH,), seqs=(SEQ,))
 
 
+def _serve_matrix(fast: bool) -> ScenarioMatrix:
+    """A small serving cell per sweep arch: the serve-throughput row."""
+    archs = SWEEP_ARCHS[:1] if fast else SWEEP_ARCHS[:2]
+    return ScenarioMatrix(archs=archs, tasks=("serve",),
+                          batches=(6,), seqs=(SEQ // 2,), slots=(2,),
+                          traces=("bursty",))
+
+
+def scenario_matrices(fast: bool = False):
+    """The matrices this benchmark executes (``benchmarks.run --list`` hook)."""
+    return [_sweep_matrix(fast), _serve_matrix(fast)]
+
+
 def dispatch_path(matrix: ScenarioMatrix, runs: int, *, jobs: int = 0,
                   isolate: bool = False) -> tuple:
     # fence off: this measures dispatch throughput, not per-cell latency
@@ -159,6 +177,31 @@ def main(fast: bool = False, runner=None) -> None:
     emit("runner_bench/shard_ratio_vs_serial", 0.0,
          f"{serial_ratio:.2f}x;host_parallel_capacity={capacity:.2f}")
 
+    # serve-throughput row: continuous-batching cells dispatched through the
+    # same sharded pool as the step sweep above (fence off: throughput run)
+    serve_matrix = _serve_matrix(fast)
+    serve_runner = BenchmarkRunner(jobs=JOBS, measure_fence=False)
+    t0 = time.perf_counter()
+    try:
+        serve_results = serve_runner.run_matrix(serve_matrix)
+    finally:
+        serve_runner.close()
+    serve_wall = time.perf_counter() - t0
+    serve_rows = []
+    for rr in serve_results:
+        if rr.status != "ok":
+            raise RuntimeError(f"{rr.name}: {rr.error}")
+        serve_rows.append({"name": rr.name,
+                           "tok_per_s": rr.extra["tok_per_s"],
+                           "ttft_p50_us": rr.extra.get("ttft_p50"),
+                           "tok_lat_p99_us": rr.extra.get("tok_lat_p99"),
+                           "shard": rr.extra.get("shard")})
+        emit(f"runner_bench/serve_tok_per_s/{rr.arch}", 0.0,
+             f"{rr.extra['tok_per_s']:.1f}tok_s;trace={rr.extra['trace']};"
+             f"slots={rr.extra['slots']}")
+    emit("runner_bench/serve_sharded_s", serve_wall * 1e6,
+         f"jobs={JOBS};{len(serve_rows)}_serve_cells")
+
     with open(results_path("runner_bench.json"), "w") as f:
         json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
                    "seed_path_s": seed_s, "runner_path_s": runner_s,
@@ -169,7 +212,9 @@ def main(fast: bool = False, runner=None) -> None:
                              "shard_speedup_vs_isolated": shard_speedup,
                              "shard_ratio_vs_serial": serial_ratio,
                              "host_parallel_capacity": capacity,
-                             "sharded_stats": shard_stats.to_dict()}},
+                             "sharded_stats": shard_stats.to_dict()},
+                   "serve": {"jobs": JOBS, "wall_s": serve_wall,
+                             "cells": serve_rows}},
                   f, indent=1)
 
 

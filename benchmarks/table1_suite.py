@@ -20,10 +20,15 @@ from repro.core.suite import get_benchmark
 from repro.runner.scenario import ScenarioMatrix
 
 
+def scenario_matrices(fast: bool = False):
+    """The matrices this table executes (``benchmarks.run --list`` hook)."""
+    tasks = ("train", "infer_decode") if fast else ("train", "infer_prefill", "infer_decode")
+    return [ScenarioMatrix(archs=sorted(ARCHS), tasks=tasks, batches=(2,), seqs=(32,))]
+
+
 def main(fast: bool = False, runner=None) -> None:
     runner = runner or make_runner()
-    tasks = ("train", "infer_decode") if fast else ("train", "infer_prefill", "infer_decode")
-    matrix = ScenarioMatrix(archs=sorted(ARCHS), tasks=tasks, batches=(2,), seqs=(32,))
+    [matrix] = scenario_matrices(fast)
     scenarios = runner.select(matrix)
     benches = [get_benchmark(s.arch, s.task) for s in scenarios]
     rep = coverage_report(benches, batch=1, seq=16, runner=runner)

@@ -1,5 +1,7 @@
-"""Batched serving example: continuous batching over a reduced mixtral
-(MoE decode path) with slot refill.
+"""Batched serving example: a continuous-batching cell as a first-class
+runner scenario (``task="serve"``) — the serving workload goes through the
+same ``BenchmarkRunner`` as train/infer cells, sharing arch builds and
+recording latency-distribution metrics.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -7,25 +9,29 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np  # noqa: E402
-
-from repro.configs import get_arch  # noqa: E402
-from repro.launch.serve import Request, Server  # noqa: E402
+from repro.runner import BenchmarkRunner, Scenario  # noqa: E402
 
 
 def main() -> int:
-    cfg = get_arch("mixtral-8x7b").reduced()
-    rng = np.random.default_rng(0)
-    requests = [Request(i, rng.integers(0, cfg.vocab, 24).astype(np.int32), max_new=12)
-                for i in range(10)]
-    server = Server(cfg, slots=4, max_len=64)
-    out = server.run(requests)
-    print(f"served {len(requests)} requests with 4 slots: "
-          f"{out['tokens']} tokens, {out['decode_steps']} batched decode steps, "
-          f"{out['tok_per_s']:.1f} tok/s")
-    for r in requests[:3]:
-        print(f"  request {r.rid}: {r.out}")
-    assert all(r.done for r in requests)
+    # 10 requests, 24-token prompts, 4 slots, bursty (Poisson) arrivals —
+    # the MoE decode path of a reduced mixtral under continuous batching
+    sc = Scenario(arch="mixtral-8x7b", task="serve", batch=10, seq=24,
+                  slots=4, trace="bursty")
+    runner = BenchmarkRunner()
+    rr = runner.run(sc, record=False)
+    assert rr.status == "ok", rr.error
+    ex = rr.extra
+    print(f"{sc.name}: {ex['tok_per_s']:.1f} tok/s over "
+          f"{ex['decode_steps']} batched decode steps "
+          f"(queue depth mean {ex['queue_depth_mean']:.2f}, "
+          f"max {ex['queue_depth_max']})")
+    print(f"  ttft_us    p50={ex['ttft_p50']:.0f} p95={ex['ttft_p95']:.0f} "
+          f"p99={ex['ttft_p99']:.0f}")
+    print(f"  tok_lat_us p50={ex['tok_lat_p50']:.0f} p95={ex['tok_lat_p95']:.0f} "
+          f"p99={ex['tok_lat_p99']:.0f}")
+    for rid, toks in enumerate(ex["tokens"][:3]):
+        print(f"  request {rid}: {toks}")
+    assert all(len(t) >= 1 for t in ex["tokens"])
     return 0
 
 

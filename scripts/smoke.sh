@@ -19,6 +19,25 @@ fi
 echo "== runner path: table1_suite --fast =="
 python -m benchmarks.run --fast --only table1_suite
 
+echo "== serve smoke: one continuous-batching cell through the runner =="
+python - <<'EOF'
+from repro.runner import BenchmarkRunner, Scenario
+
+sc = Scenario(arch="gemma-2b", task="serve", batch=4, seq=8, slots=2,
+              trace="bursty")
+runner = BenchmarkRunner()
+rr = runner.run(sc, record=False)
+print(f"  {rr.name}: {rr.status} "
+      f"({rr.extra.get('tok_per_s', 0):.1f} tok/s, "
+      f"ttft_p50={rr.extra.get('ttft_p50', 0):.0f}us)")
+assert rr.status == "ok", rr.error
+for key in ("ttft_p50", "ttft_p95", "ttft_p99", "tok_lat_p50", "tok_lat_p95",
+            "tok_lat_p99", "tok_per_s", "trace", "slots", "tokens_digest"):
+    assert key in rr.extra, key
+assert len(rr.extra["tokens"]) == 4
+print("serve smoke OK")
+EOF
+
 echo "== sharded dispatch: 2-cell matrix across --jobs 2 workers =="
 python - <<'EOF'
 from repro.runner import BenchmarkRunner, ScenarioMatrix

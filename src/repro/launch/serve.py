@@ -1,17 +1,42 @@
-"""Batched serving driver: continuous-batching decode loop.
+"""Continuous-batching inference serving engine (the ``task="serve"``
+workload — NOT ``repro.runner.worker --serve``, which is the benchmark
+pool's worker-protocol flag; see the disambiguation note below).
 
-A minimal production-shaped server: a request queue, a prefill stage and a
-batched decode loop with per-slot completion and refill (continuous
-batching).  Runs reduced configs on CPU (examples, tests) and full configs
-on a TPU mesh via the same code path.
+A minimal production-shaped server: a request queue with virtual-time
+arrivals, a prefill stage, and a batched decode loop with per-slot
+completion and refill (continuous batching).  Runs reduced configs on CPU
+(examples, tests) and full configs on a TPU mesh via the same code path.
+
+Layering (ISSUE 3):
+
+* ``ServeEngine`` is the engine proper.  It accepts a prebuilt
+  ``repro.core.suite.Built`` (config + model + params) so the
+  BenchmarkRunner's arch-build cache is shared between serve cells and
+  the train/infer cells of the same arch — the engine never builds
+  models itself.
+* Request traces come from ``repro.runner.traces``: deterministic load
+  profiles (uniform / bursty / mixed) whose arrivals are expressed in
+  decode-step *virtual time*, so generated tokens are a pure function of
+  (trace spec, params) — identical serially and under sharded dispatch.
+* Latency distributions (TTFT and per-token p50/p95/p99) are produced by
+  ``summarize_metrics`` on the engine's raw per-request timestamps,
+  using the shared ``repro.runner.latency`` percentile helper.
+* The CLI at the bottom is a thin shell: resolve config -> build ->
+  generate trace -> run engine -> print the summary.  Benchmarked runs
+  go through ``BenchmarkRunner`` (``Scenario(task="serve")``) instead.
+
+Naming note: "serve" appears twice in this codebase with unrelated
+meanings.  THIS module is the inference-serving *workload*.  The
+``--serve`` flag of ``repro.runner.worker`` puts a benchmark worker into
+its persistent JSONL pool protocol (any task, including this one, can be
+dispatched through it).  Grep accordingly.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
-        --requests 16 --slots 4 --prompt-len 32 --max-new 16
+        --requests 16 --slots 4 --prompt-len 32 --trace bursty
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import Any, Dict, List, Optional
 
@@ -19,39 +44,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import build_model
+from repro.runner.latency import latency_summary
+from repro.runner.traces import (Request, TraceSpec, cache_len_bound,
+                                 generate, tokens_by_rid, tokens_digest)
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (P,) int32
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class ServeEngine:
+    """Slot-based continuous batching over a shared decode step.
 
+    ``built`` is a ``repro.core.suite.Built`` (or anything with ``cfg`` /
+    ``model`` / ``params`` attributes).  The engine jits its prefill and
+    decode steps once at construction; ``run()`` resets all per-trace
+    state, so one engine instance (and its compiled executables) can
+    replay any number of traces — the BenchmarkRunner caches engines per
+    (build, slots, max_len) exactly like step executables.
+    """
 
-class Server:
-    """Slot-based continuous batching over a shared decode step."""
-
-    def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0):
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = self.model.init(jax.random.key(seed))
+    def __init__(self, built, *, slots: int, max_len: int,
+                 donate: bool = True):
+        self.cfg = built.cfg
+        self.model = built.model
+        self.params = built.params
         self.slots = slots
         self.max_len = max_len
-        self.cache = self.model.init_cache(slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * slots
-        self.slot_pos = np.zeros(slots, np.int32)
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        dargs = (2,) if donate else ()
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=dargs)
         self._prefill_cache = jax.jit(
-            lambda p, b, c: self.model.prefill(p, b, c), donate_argnums=(2,))
+            lambda p, b, c: self.model.prefill(p, b, c), donate_argnums=dargs)
+        self._reset()
+
+    def _reset(self) -> None:
+        self.cache = self.model.init_cache(self.slots, self.max_len)
+        self.slot_req: List[Optional[Request]] = [None] * self.slots
+        self.slot_pos = np.zeros(self.slots, np.int32)
         self.steps = 0
+        # upper bound on the shared lockstep cache position: longest prompt
+        # admitted so far + every decode step of the replay (the counter
+        # never rewinds on slot refill).  Guarded in run(): overflowing
+        # max_len would silently clamp KV writes, corrupting attention.
+        self._pos_bound = 0
 
     def _admit(self, req: Request, slot: int) -> int:
-        """Prefill a single request into `slot`; returns first token."""
+        """Prefill a single request into ``slot``; returns first token."""
         # per-slot prefill on a fresh single-row cache, then splice in
         one = self.model.init_cache(1, self.max_len)
         batch = {"tokens": jnp.asarray(req.prompt[None, :])}
@@ -62,52 +96,146 @@ class Server:
         logits, one = self._prefill_cache(self.params, batch, one)
         # Caches interact across slots only through the batch dim; splice the
         # new row in.  NOTE: the shared per-layer `len` counter means slots
-        # decode in lockstep positions — prompts must share a length (as in
-        # this driver).  Per-slot position vectors are a serve-layer upgrade
-        # tracked in DESIGN.md.
+        # decode in lockstep positions — prompts must share a length within
+        # a trace (``traces.TraceSpec`` enforces this).  Per-slot position
+        # vectors are a serve-layer upgrade tracked in DESIGN.md.
         self.cache = _splice_cache(self.cache, one, slot)
         self.slot_req[slot] = req
         self.slot_pos[slot] = len(req.prompt)
+        self._pos_bound = max(self._pos_bound, len(req.prompt))
         return int(jnp.argmax(logits[0, -1]))
 
-    def run(self, requests: List[Request]) -> Dict[str, Any]:
-        pending = list(requests)
-        active = 0
-        t0 = time.perf_counter()
-        tokens_out = 0
-        # admit initial
+    def run(self, requests: List[Request], *, hook=None) -> Dict[str, Any]:
+        """Replay a trace; returns throughput + raw latency samples.
+
+        Admission is driven by the decode-step counter (virtual time):
+        a request with ``arrival_step=k`` can be admitted only once ``k``
+        decode steps have elapsed (the counter fast-forwards when slots
+        drain), so slot assignment — and therefore every generated token
+        — is deterministic regardless of host speed.  Wall-clock
+        timestamps are stamped alongside for the latency metrics.
+
+        ``hook`` is an optional ``RegressionHook`` fired once per decode
+        step, so injected-slowdown CI probes work on serve cells too.
+        """
+        self._reset()
+        upcoming = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        for r in upcoming:
+            r.out, r.done = [], False
+            r.t_arrival = r.t_first = r.t_done = 0.0
+        waiting: List[Request] = []
         next_tok = np.zeros(self.slots, np.int32)
-        for s in range(self.slots):
-            if pending:
-                req = pending.pop(0)
+        step = active = done_count = tokens_out = 0
+        total = len(upcoming)
+        ttft_s: List[float] = []
+        tok_lat_s: List[float] = []
+        qdepth: List[int] = []
+        t0 = time.perf_counter()
+        while done_count < total:
+            now = time.perf_counter()
+            while upcoming and upcoming[0].arrival_step <= step:
+                req = upcoming.pop(0)
+                req.t_arrival = now
+                waiting.append(req)
+            if active == 0 and not waiting:
+                # slots drained before the next burst: fast-forward the
+                # virtual clock to the next arrival (no idle decode spins)
+                step = upcoming[0].arrival_step
+                continue
+            for s in range(self.slots):
+                if not waiting:
+                    break
+                if self.slot_req[s] is not None and not self.slot_req[s].done:
+                    continue
+                req = waiting.pop(0)
                 tok = self._admit(req, s)
                 req.out.append(tok)
+                tokens_out += 1
+                tnow = time.perf_counter()
+                req.t_first = tnow
+                ttft_s.append(tnow - req.t_arrival)
                 next_tok[s] = tok
                 active += 1
-        while active > 0:
+                if len(req.out) >= req.max_new:     # budget of 1: done at prefill
+                    req.done = True
+                    req.t_done = tnow
+                    active -= 1
+                    done_count += 1
+            qdepth.append(len(waiting))
+            if active == 0:
+                step += 1
+                continue
+            if self._pos_bound + 1 > self.max_len:
+                raise RuntimeError(
+                    f"KV cache exhausted: lockstep position bound "
+                    f"{self._pos_bound + 1} > max_len {self.max_len} — size "
+                    f"the engine with traces.cache_len_bound() for the trace")
+            ts = time.perf_counter()
             toks = jnp.asarray(next_tok[:, None])
             logits, self.cache = self._decode(self.params, toks, self.cache)
-            self.steps += 1
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            if hook is not None:
+                hook.fire()   # inside the timed sample, like harness.measure
+            dt = time.perf_counter() - ts
+            self.steps += 1
+            step += 1
+            self._pos_bound += 1
             for s in range(self.slots):
                 req = self.slot_req[s]
                 if req is None or req.done:
                     continue
                 req.out.append(int(nxt[s]))
                 tokens_out += 1
+                tok_lat_s.append(dt)
                 next_tok[s] = nxt[s]
                 if len(req.out) >= req.max_new:
                     req.done = True
+                    req.t_done = time.perf_counter()
                     active -= 1
-                    if pending:   # refill the slot (continuous batching)
-                        nreq = pending.pop(0)
-                        tok = self._admit(nreq, s)
-                        nreq.out.append(tok)
-                        next_tok[s] = tok
-                        active += 1
+                    done_count += 1
         wall = time.perf_counter() - t0
-        return {"decode_steps": self.steps, "tokens": tokens_out, "wall_s": wall,
-                "tok_per_s": tokens_out / wall if wall else 0.0}
+        return {"requests": total, "decode_steps": self.steps,
+                "tokens": tokens_out, "wall_s": wall,
+                "tok_per_s": tokens_out / wall if wall else 0.0,
+                "ttft_s": ttft_s, "tok_lat_s": tok_lat_s,
+                "queue_depth_mean": (sum(qdepth) / len(qdepth)) if qdepth else 0.0,
+                "queue_depth_max": max(qdepth) if qdepth else 0,
+                "tokens_by_rid": tokens_by_rid(requests)}
+
+
+def summarize_metrics(out: Dict[str, Any]) -> Dict[str, Any]:
+    """The well-known serve metric keys (see ``runner/results.py``) from an
+    engine ``run()`` payload: TTFT / per-token latency p50/p95/p99 in us,
+    throughput, queue depth, and the token digest."""
+    summary: Dict[str, Any] = {
+        "tok_per_s": out["tok_per_s"],
+        "decode_steps": out["decode_steps"],
+        "queue_depth_mean": out["queue_depth_mean"],
+        "queue_depth_max": out["queue_depth_max"],
+        "tokens_digest": tokens_digest(out["tokens_by_rid"]),
+    }
+    summary.update(latency_summary(out["ttft_s"], "ttft", scale=1e6))
+    summary.update(latency_summary(out["tok_lat_s"], "tok_lat", scale=1e6))
+    return summary
+
+
+def built_for_cfg(cfg, seed: int = 0):
+    """Build (model + params) for an already-resolved config — the
+    non-runner path shared by the ``Server`` shim and the ``--full`` CLI
+    (the runner's ``built_for`` caches reduced builds instead)."""
+    from repro.core.suite import Built
+    from repro.models import build_model
+    model = build_model(cfg)
+    return Built(cfg=cfg, model=model, params=model.init(jax.random.key(seed)))
+
+
+class Server(ServeEngine):
+    """Compat shim over ``ServeEngine`` for direct (non-runner) callers:
+    builds the model from a config, like the pre-runner serving driver."""
+
+    def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0):
+        super().__init__(built_for_cfg(cfg, seed), slots=slots,
+                         max_len=max_len)
 
 
 def _splice_cache(big, one, slot: int):
@@ -134,18 +262,33 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--trace", default="uniform",
+                    help="load profile: uniform | bursty | mixed")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
-    cfg = get_arch(args.arch)
-    if not args.full:
-        cfg = cfg.reduced()
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32), args.max_new)
-            for i in range(args.requests)]
-    srv = Server(cfg, slots=args.slots, max_len=args.prompt_len + args.max_new + 8)
-    out = srv.run(reqs)
-    print(f"served {args.requests} requests: {out['tokens']} tokens in "
-          f"{out['wall_s']:.2f}s ({out['tok_per_s']:.1f} tok/s, {out['decode_steps']} steps)")
+    from repro.core.suite import build_arch
+    from repro.configs import get_arch
+    if args.full:
+        built = built_for_cfg(get_arch(args.arch))
+    else:
+        built = build_arch(args.arch)
+    spec = TraceSpec(profile=args.trace, requests=args.requests,
+                     prompt_len=args.prompt_len, max_new=args.max_new,
+                     seed=args.seed)
+    reqs = generate(spec, vocab=built.cfg.vocab)
+    engine = ServeEngine(built, slots=args.slots,
+                         max_len=cache_len_bound(reqs, spec.prompt_len))
+    out = engine.run(reqs)
+    m = summarize_metrics(out)
+    print(f"served {args.requests} requests ({args.trace}): {out['tokens']} tokens "
+          f"in {out['wall_s']:.2f}s ({m['tok_per_s']:.1f} tok/s, "
+          f"{out['decode_steps']} steps)")
+    print(f"  ttft_us    p50={m.get('ttft_p50', 0):.0f} "
+          f"p95={m.get('ttft_p95', 0):.0f} p99={m.get('ttft_p99', 0):.0f}")
+    print(f"  tok_lat_us p50={m.get('tok_lat_p50', 0):.0f} "
+          f"p95={m.get('tok_lat_p95', 0):.0f} p99={m.get('tok_lat_p99', 0):.0f}")
+    print(f"  queue_depth mean={m['queue_depth_mean']:.2f} max={m['queue_depth_max']}")
     return 0
 
 

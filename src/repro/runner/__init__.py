@@ -6,13 +6,21 @@ Public surface:
     BenchmarkRunner, RunnerStats execution + build/executable reuse + isolation
     ShardScheduler, assign_shards sharded process-pool dispatch (jobs=N)
     RunResult, ResultStore       versioned records, JSONL log + latest pointer
+    TraceSpec, generate_trace    deterministic serving load profiles
+    percentile, latency_summary  shared latency-distribution helpers
 """
+from repro.runner.latency import latency_summary, percentile
 from repro.runner.pool import ShardScheduler, assign_shards
 from repro.runner.results import SCHEMA_VERSION, ResultStore, RunResult
 from repro.runner.runner import (BenchmarkRunner, RunnerStats,
                                  dryrun_cell_subprocess)
-from repro.runner.scenario import MODES, Scenario, ScenarioMatrix
+from repro.runner.scenario import (MODES, SERVE_MODES, STEP_TASKS, TASKS,
+                                   Scenario, ScenarioMatrix)
+from repro.runner.traces import PROFILES, Request, TraceSpec
+from repro.runner.traces import generate as generate_trace
 
-__all__ = ["Scenario", "ScenarioMatrix", "MODES", "BenchmarkRunner",
-           "RunnerStats", "ShardScheduler", "assign_shards", "RunResult",
-           "ResultStore", "SCHEMA_VERSION", "dryrun_cell_subprocess"]
+__all__ = ["Scenario", "ScenarioMatrix", "MODES", "SERVE_MODES", "TASKS",
+           "STEP_TASKS", "BenchmarkRunner", "RunnerStats", "ShardScheduler",
+           "assign_shards", "RunResult", "ResultStore", "SCHEMA_VERSION",
+           "dryrun_cell_subprocess", "PROFILES", "Request", "TraceSpec",
+           "generate_trace", "percentile", "latency_summary"]

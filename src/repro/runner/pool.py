@@ -64,9 +64,12 @@ def _subprocess_env() -> Dict[str, str]:
 
 
 #: relative cost guess per task for shard balancing (a train step runs
-#: fwd+bwd+update; decode is a single cached token) — only the ratios
-#: matter, and only for load balance, never for correctness
-_TASK_WEIGHT = {"train": 4, "infer_prefill": 2, "infer_decode": 1}
+#: fwd+bwd+update; decode is a single cached token; a serve cell replays a
+#: whole continuous-batching trace — many decode steps plus per-request
+#: prefills) — only the ratios matter, and only for load balance, never
+#: for correctness
+_TASK_WEIGHT = {"train": 4, "infer_prefill": 2, "infer_decode": 1,
+                "serve": 8}
 
 
 def assign_shards(scenarios: Sequence[Scenario], jobs: int) -> List[List[int]]:

@@ -27,6 +27,33 @@ must tolerate their absence):
                                   snapshot (model builds / compiles that
                                   happened out-of-process)
 
+Serving cells (``task="serve"``, the continuous-batching engine in
+``repro.launch.serve``) additionally carry the latency-distribution
+metrics production users compare (all latencies in **microseconds**,
+computed by ``repro.runner.latency``); for these records the core timing
+fields ``median_us``/``mean_us``/``p10_us``/``p90_us`` hold *per-token
+decode latencies* (not step times) and ``runs`` is the request count:
+
+    extra["ttft_p50"|"ttft_p95"|"ttft_p99"]          time-to-first-token
+                                  percentiles: request became admissible
+                                  -> first (prefill) token emitted (a
+                                  fresh engine's prefill/decode jit is
+                                  paid by an untimed warm replay and
+                                  recorded in ``compile_us``, so these
+                                  are steady-state like step timings)
+    extra["tok_lat_p50"|"tok_lat_p95"|"tok_lat_p99"] per-token decode
+                                  latency percentiles across all tokens
+    extra["tok_per_s"]     float  generated-token throughput (incl. first
+                                  tokens) over the trace replay wall time
+    extra["decode_steps"]  int    batched decode steps executed
+    extra["queue_depth_mean"|"queue_depth_max"]      arrived-but-unadmitted
+                                  requests sampled once per decode step
+    extra["trace"]         str    load-profile name (runner/traces.py)
+    extra["slots"]         int    decode batch width (continuous batching)
+    extra["tokens"]        list   generated tokens per request, rid order —
+                                  the serial-vs-sharded determinism witness
+    extra["tokens_digest"] str    sha256 of extra["tokens"]
+
 ``ResultStore`` — the persistence layer:
 
     * an append-only JSONL run log (full history, one record per line);

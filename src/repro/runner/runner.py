@@ -34,7 +34,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.harness import (Measurement, RegressionHook, measure,
                                 measure_eager, prepare)
 from repro.core.suite import Benchmark, Built, build_arch, get_benchmark
+from repro.runner.latency import percentile
 from repro.runner.pool import ShardScheduler, _subprocess_env
+from repro.runner.traces import cache_len_bound, spec_for_scenario
+from repro.runner.traces import generate as generate_trace
 from repro.runner.results import ResultStore, RunResult
 from repro.runner.scenario import Scenario, ScenarioMatrix, select_scenarios
 
@@ -101,6 +104,9 @@ class BenchmarkRunner:
         self.stats = RunnerStats()
         self._built: Dict[Tuple, Built] = {}
         self._execs: Dict[Scenario, _ExecEntry] = {}
+        # serve engines (compiled prefill/decode + slot state) cached per
+        # (build_key, max_len) — the serving analogue of _execs
+        self._serve_engines: Dict[Tuple, Any] = {}
         self._dryrun_mem: Dict[str, dict] = {}
         self._pool: Optional[ShardScheduler] = None
 
@@ -161,10 +167,17 @@ class BenchmarkRunner:
             runs: Optional[int] = None, warmup: Optional[int] = None,
             record: bool = True) -> RunResult:
         """Execute one scenario and return its RunResult (never raises for
-        benchmark failures — they come back as status="error" records)."""
+        benchmark failures — they come back as status="error" records).
+
+        ``task="serve"`` cells run the continuous-batching engine over the
+        scenario's trace instead of the ``measure()`` step protocol;
+        ``runs``/``warmup`` don't apply there (the trace defines the work).
+        """
         if self.isolate:
             return self._run_isolated(scenario, hook=hook, runs=runs,
                                       warmup=warmup, record=record)
+        if scenario.task == "serve":
+            return self._run_serve(scenario, hook=hook, record=record)
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
         try:
@@ -197,6 +210,93 @@ class BenchmarkRunner:
             # a failed measure may have consumed donated buffers mid-loop:
             # evict the cached executable so the next run rebuilds cleanly
             self._execs.pop(scenario, None)
+            rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
+                                      wall_s=time.perf_counter() - t0)
+        if record and self.store is not None:
+            self.store.append(rr)
+        return rr
+
+    # ---- serving path ----------------------------------------------------
+
+    def _serve_engine_for(self, scenario: Scenario, built: Built,
+                          max_len: int) -> Tuple[Any, bool]:
+        """The cached continuous-batching engine for a serve cell; returns
+        (engine, reused).  Keyed by (build_key, mode, max_len): the
+        compiled decode step is shaped by (slots, max_len) and its donation
+        by mode — build_key alone can't tell jit from jit_donated — while
+        trace profiles of one shape share the engine (the trace never
+        affects compilation)."""
+        from repro.launch.serve import ServeEngine
+        key = (scenario.build_key(), scenario.mode, max_len)
+        if self.reuse and key in self._serve_engines:
+            self.stats.executable_cache_hits += 1
+            return self._serve_engines[key], True
+        engine = ServeEngine(built, slots=scenario.slots, max_len=max_len,
+                             donate=scenario.mode == "jit_donated")
+        self.stats.executable_builds += 1
+        if self.reuse:
+            self._serve_engines[key] = engine
+        return engine, False
+
+    def _run_serve(self, scenario: Scenario, *,
+                   hook: Optional[RegressionHook] = None,
+                   record: bool = True) -> RunResult:
+        """One serving cell: regenerate the scenario's trace, replay it
+        through the (cached) engine, and fold the latency distribution into
+        a RunResult — ``median_us``/``mean_us``/``p10_us``/``p90_us`` are
+        per-token decode latencies, and the TTFT/per-token p50/p95/p99 +
+        throughput land under the well-known ``extra`` keys documented in
+        ``runner/results.py``."""
+        from repro.launch.serve import summarize_metrics
+        t0 = time.perf_counter()
+        self.stats.scenarios_run += 1
+        key = None
+        try:
+            spec = spec_for_scenario(scenario)
+            hits0 = self.stats.model_cache_hits
+            built = self.built_for(scenario.arch, dtype=scenario.dtype,
+                                   mode=scenario.mode)
+            model_reused = self.stats.model_cache_hits > hits0
+            reqs = generate_trace(spec, vocab=built.cfg.vocab)
+            # sized for the whole replay: the engine's lockstep position
+            # counter keeps advancing across slot refills
+            max_len = cache_len_bound(reqs, spec.prompt_len)
+            key = (scenario.build_key(), scenario.mode, max_len)
+            engine, engine_reused = self._serve_engine_for(scenario, built,
+                                                           max_len)
+            cache = {"model_reused": model_reused or engine_reused,
+                     "executable_reused": engine_reused}
+            compile_us = 0.0
+            if not engine_reused:
+                # untimed warm replay on a fresh engine: pays the prefill/
+                # decode jit (recorded as compile_us, like a step cell's
+                # first measure call) so the measured replay's latency
+                # samples — and its TTFTs — are steady-state and stay
+                # comparable with cache-hit re-measures
+                tc = time.perf_counter()
+                engine.run(reqs)
+                compile_us = (time.perf_counter() - tc) * 1e6
+            out = engine.run(reqs, hook=hook)
+            extra = summarize_metrics(out)
+            extra.update(trace=scenario.trace, slots=scenario.slots,
+                         tokens=out["tokens_by_rid"])
+            lats = out["tok_lat_s"] or out["ttft_s"]
+            rr = RunResult(
+                name=scenario.name, bench=scenario.bench, arch=scenario.arch,
+                task=scenario.task, batch=scenario.batch, seq=scenario.seq,
+                dtype=scenario.dtype, mode=scenario.mode, status="ok",
+                median_us=percentile(lats, 50) * 1e6,
+                mean_us=sum(lats) / len(lats) * 1e6,
+                p10_us=percentile(lats, 10) * 1e6,
+                p90_us=percentile(lats, 90) * 1e6,
+                compile_us=compile_us, runs=out["requests"],
+                wall_s=time.perf_counter() - t0, cache=cache,
+                ts=time.time(), extra=extra)
+        except Exception as e:  # noqa: BLE001 — fault containment per cell
+            self.stats.errors += 1
+            # the engine's donated KV cache may be half-consumed: evict it
+            if key is not None:
+                self._serve_engines.pop(key, None)
             rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
                                       wall_s=time.perf_counter() - t0)
         if record and self.store is not None:

@@ -2,9 +2,13 @@
 
 A ``Scenario`` is one fully-specified benchmark execution:
 
-    arch x task x batch x seq x dtype x compiler-mode
+    arch x task x batch x seq x dtype x compiler-mode [x slots x trace]
 
-``ScenarioMatrix`` expands the cartesian product and applies the
+The bracketed axes exist only under ``task="serve"`` (the
+continuous-batching serving workload, ``repro.launch.serve``): ``slots``
+is the decode batch width and ``trace`` the deterministic load profile
+(``repro.runner.traces``).  ``ScenarioMatrix`` expands the cartesian
+product and applies the
 torchbench-driver selection semantics (regex ``filter`` / ``exclude``
 against the scenario name, plus an exact ``skip`` list — matching the
 torchdynamo ``iter_models`` front door).
@@ -16,7 +20,18 @@ import itertools
 import re
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
-TASKS = ("train", "infer_prefill", "infer_decode")
+#: single-step tasks measured by the harness ``measure()`` protocol
+STEP_TASKS = ("train", "infer_prefill", "infer_decode")
+
+#: all tasks, including the continuous-batching serving workload, which is
+#: a whole engine run per cell (``repro.launch.serve``), not a single step
+TASKS = STEP_TASKS + ("serve",)
+
+#: execution modes valid for the serving task: the continuous-batching
+#: engine is a jitted decode loop — op-by-op dispatch (eager) and the
+#: train-only reduced-config modes don't apply.  "jit_donated" donates
+#: the KV cache into each decode step (the production protocol).
+SERVE_MODES = ("jit", "jit_donated")
 
 #: compiler-execution modes (paper Figs. 3-4 comparison; see core/compilers.py)
 #:   eager        op-by-op dispatch (jax.disable_jit)
@@ -46,13 +61,22 @@ def dtype_overrides(dtype: str) -> Dict[str, Any]:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One cell of the execution matrix (hashable: used as a cache key)."""
+    """One cell of the execution matrix (hashable: used as a cache key).
+
+    The serving task carries two extra axes — ``slots`` (decode batch
+    rows) and ``trace`` (load-profile name, see ``runner/traces.py``) —
+    which stay inert (0 / "") on every other task.  For ``task="serve"``
+    the shared axes are reinterpreted: ``batch`` is the trace's request
+    count and ``seq`` its prompt length.
+    """
     arch: str
     task: str = "train"
     batch: int = 2
     seq: int = 64
     dtype: str = "fp32"
     mode: str = "jit_donated"
+    slots: int = 0
+    trace: str = ""
 
     def __post_init__(self):
         if self.task not in TASKS:
@@ -61,6 +85,24 @@ class Scenario:
             raise ValueError(f"unknown mode {self.mode!r} (known: {MODES})")
         if self.dtype not in DTYPES:
             raise ValueError(f"unknown dtype {self.dtype!r} (known: {DTYPES})")
+        if self.task == "serve":
+            if self.mode not in SERVE_MODES:
+                raise ValueError(f"serve supports modes {SERVE_MODES}, "
+                                 f"not {self.mode!r}")
+            # normalize the serve axes so Scenario(task="serve") works bare
+            if self.slots == 0:
+                object.__setattr__(self, "slots", 4)
+            if not self.trace:
+                object.__setattr__(self, "trace", "uniform")
+            if self.slots < 1:
+                raise ValueError(f"serve needs slots >= 1, got {self.slots}")
+            from repro.runner.traces import PROFILES
+            if self.trace not in PROFILES:
+                raise ValueError(f"unknown trace profile {self.trace!r} "
+                                 f"(known: {PROFILES})")
+        elif self.slots or self.trace:
+            raise ValueError(f"slots/trace are serve-only axes "
+                             f"(task={self.task!r})")
 
     @property
     def bench(self) -> str:
@@ -69,15 +111,29 @@ class Scenario:
 
     @property
     def name(self) -> str:
-        return f"{self.arch}/{self.task}/b{self.batch}/s{self.seq}/{self.dtype}/{self.mode}"
+        base = f"{self.arch}/{self.task}/b{self.batch}/s{self.seq}/{self.dtype}/{self.mode}"
+        if self.task == "serve":
+            return f"{base}/x{self.slots}/{self.trace}"
+        return base
 
     def build_overrides(self) -> Dict[str, Any]:
         """Reduced-config overrides implied by (mode, dtype)."""
         return {**dtype_overrides(self.dtype), **MODE_OVERRIDES.get(self.mode, {})}
 
     def build_key(self) -> Tuple:
-        """Cache key for the arch build (model + params) this scenario needs."""
-        return (self.arch, self.dtype, self.mode in MODE_OVERRIDES and self.mode)
+        """Cache key for the arch build (model + params) this scenario needs.
+
+        Serve cells extend the key with ("serve", slots): the compiled
+        decode executable is shaped by the slot count, so sharding by
+        build_key keeps each worker's serve-engine cache hot.  The trace
+        profile is deliberately NOT in the key — it changes the replayed
+        load, never what gets built or compiled, so traces of one
+        (arch, slots) group should land on one worker and share engines.
+        """
+        base = (self.arch, self.dtype, self.mode in MODE_OVERRIDES and self.mode)
+        if self.task == "serve":
+            return base + ("serve", self.slots)
+        return base
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -110,17 +166,26 @@ class ScenarioMatrix:
       ("arch/task"), or a bare arch (the torchbench SKIP-set idiom for
       known-broken models).
 
+    ``slots`` / ``traces`` are the serve-only axes: they multiply out
+    only under ``task="serve"`` (every other task gets exactly one
+    scenario per (arch, batch, seq, dtype, mode) cell, with the serve
+    axes inert).  Serve cells silently skip modes outside
+    ``SERVE_MODES`` — a matrix mixing ``tasks=("train", "serve")`` with
+    ``modes=("eager", ...)`` expands the eager cell for train only.
+
     Expansion (the cartesian product AND the regex selection) is memoized
     on the current field values — ``len(m)`` / ``for s in m`` / nested
     ``m.expand()`` calls pay for one expansion, and editing any field
     invalidates the cache.
     """
     archs: Sequence[str]
-    tasks: Sequence[str] = TASKS
+    tasks: Sequence[str] = STEP_TASKS     # serve is opt-in: tasks=("serve",)
     batches: Sequence[int] = (2,)
     seqs: Sequence[int] = (64,)
     dtypes: Sequence[str] = ("fp32",)
     modes: Sequence[str] = ("jit_donated",)
+    slots: Sequence[int] = (4,)
+    traces: Sequence[str] = ("uniform",)
     filter: Sequence[str] = ()
     exclude: Sequence[str] = ()
     skip: Sequence[str] = ()
@@ -139,11 +204,19 @@ class ScenarioMatrix:
         for arch, task, batch, seq, dtype, mode in itertools.product(
                 self.archs, self.tasks, self.batches, self.seqs,
                 self.dtypes, self.modes):
-            s = Scenario(arch=arch, task=task, batch=batch, seq=seq,
-                         dtype=dtype, mode=mode)
-            if {s.name, s.bench, s.arch} & skip:
-                continue
-            out.append(s)
+            if task == "serve":
+                if mode not in SERVE_MODES:
+                    continue      # eager/reduced-config modes are train-only
+                cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
+                                  dtype=dtype, mode=mode, slots=k, trace=t)
+                         for k, t in itertools.product(self.slots, self.traces)]
+            else:
+                cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
+                                  dtype=dtype, mode=mode)]
+            for s in cells:
+                if {s.name, s.bench, s.arch} & skip:
+                    continue
+                out.append(s)
         out = select_scenarios(out, self.filter, self.exclude)
         self._expand_cache = (key, out)
         return out

@@ -1,0 +1,153 @@
+"""Deterministic request-trace generation for serving scenarios.
+
+A *trace* is the load profile a serve cell (``Scenario(task="serve")``)
+replays: a list of requests with prompts, output budgets, and arrival
+times.  Arrival time is expressed in **decode steps** (virtual time), not
+wall seconds: the continuous-batching engine admits a request once its
+``arrival_step`` has passed, so which requests share slots — and therefore
+the exact tokens generated — depends only on (profile, seed), never on
+host speed.  That is what makes the acceptance invariant possible: the
+same trace produces byte-identical token outputs whether the cell runs
+serially in-process or sharded across worker subprocesses.
+
+Profiles (``PROFILES``):
+
+    uniform   every request available at step 0, fixed output budget —
+              the closed-loop saturation workload;
+    bursty    Poisson arrivals: exponential inter-arrival gaps in
+              decode-step time, fixed output budget — the open-loop
+              production shape where queues actually form;
+    mixed     Poisson arrivals AND per-request output budgets drawn from
+              a discrete distribution in [max(1, max_new//2), 2*max_new]
+              — staggers slot completion, stressing continuous refill.
+
+Prompt lengths are uniform within a trace: the engine's KV cache keeps a
+single shared position counter per layer, so slots decode in lockstep
+positions (see ``repro.launch.serve``).  Per-slot position tracking is
+the serve-layer upgrade that unlocks mixed *prompt* lengths; until then
+the spec varies output lengths only, which is what exercises continuous
+batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+PROFILES = ("uniform", "bursty", "mixed")
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request; field order is stable public API (positional
+    construction ``Request(rid, prompt, max_new)`` predates traces)."""
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    arrival_step: int = 0         # decode step at which it becomes admissible
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # wall-clock timestamps stamped by the serve engine (0.0 = never)
+    t_arrival: float = 0.0        # loop clock reached arrival_step
+    t_first: float = 0.0          # first token emitted (prefill argmax)
+    t_done: float = 0.0           # final token emitted
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Everything needed to regenerate a trace deterministically."""
+    profile: str
+    requests: int
+    prompt_len: int
+    max_new: int                  # base output budget (cap: 2x for "mixed")
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.profile not in PROFILES:
+            raise ValueError(f"unknown trace profile {self.profile!r} "
+                             f"(known: {PROFILES})")
+        if self.requests < 1 or self.prompt_len < 1 or self.max_new < 1:
+            raise ValueError(f"degenerate trace spec {self}")
+
+    @property
+    def max_new_cap(self) -> int:
+        """Largest output budget any single request of this spec can carry
+        (the "mixed" profile draws budgets up to 2x the base).  NOTE: this
+        bounds one request, not the KV cache — size engines with
+        ``cache_len_bound()``, which covers the whole replay."""
+        return 2 * self.max_new if self.profile == "mixed" else self.max_new
+
+
+def default_max_new(prompt_len: int) -> int:
+    """The scenario-derived base output budget (seq axis -> prompt len)."""
+    return max(4, prompt_len // 2)
+
+
+def generate(spec: TraceSpec, vocab: int) -> List[Request]:
+    """Expand a spec into concrete requests, sorted by (arrival, rid).
+
+    All randomness flows from one ``default_rng(seed)`` in a fixed draw
+    order, so a spec is a pure function of its fields — the worker
+    subprocess regenerating the trace from the scenario gets the same
+    requests the in-process path would.
+    """
+    rng = np.random.default_rng(spec.seed)
+    prompts = rng.integers(0, vocab, (spec.requests, spec.prompt_len),
+                           dtype=np.int64).astype(np.int32)
+    arrivals = np.zeros(spec.requests, np.int64)
+    if spec.profile in ("bursty", "mixed"):
+        # Poisson process in decode-step time: the mean gap is half an
+        # output budget, so bursts overlap in-flight requests and lulls
+        # briefly drain the slots — both admission paths get exercised
+        gaps = rng.exponential(scale=max(1.0, spec.max_new / 2.0),
+                               size=spec.requests)
+        arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(np.int64)
+    budgets = np.full(spec.requests, spec.max_new, np.int64)
+    if spec.profile == "mixed":
+        budgets = rng.integers(max(1, spec.max_new // 2),
+                               spec.max_new_cap + 1, spec.requests)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=int(budgets[i]),
+                    arrival_step=int(arrivals[i]))
+            for i in range(spec.requests)]
+    reqs.sort(key=lambda r: (r.arrival_step, r.rid))
+    return reqs
+
+
+def cache_len_bound(requests: Sequence[Request], prompt_len: int) -> int:
+    """KV-cache length the serve engine needs for a trace.
+
+    The engine's per-layer position counter is shared across slots (see
+    ``repro.launch.serve``) and advances once per batched decode step for
+    the WHOLE trace replay — it never rewinds on slot refill.  Every
+    decode step emits at least one token and each request emits
+    ``max_new - 1`` decode tokens, so total steps are bounded by
+    ``sum(max_new) - len(requests)``; the cache must cover the prompt
+    plus that many positions.  (Per-slot position vectors — the DESIGN.md
+    upgrade — would shrink this to prompt_len + max(max_new).)
+    """
+    steps = max(0, sum(r.max_new for r in requests) - len(requests))
+    return prompt_len + steps + 8
+
+
+def tokens_by_rid(requests: Sequence[Request]) -> List[List[int]]:
+    """Generated tokens in rid order — the canonical output view used for
+    the serial-vs-sharded determinism check."""
+    return [list(r.out) for r in sorted(requests, key=lambda r: r.rid)]
+
+
+def tokens_digest(tokens: Sequence[Sequence[int]]) -> str:
+    """Stable digest of generated tokens (rid-ordered list of lists)."""
+    payload = json.dumps([list(t) for t in tokens], separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def spec_for_scenario(scenario, *, seed: Optional[int] = None) -> TraceSpec:
+    """The TraceSpec a serve scenario denotes: batch -> request count,
+    seq -> prompt length, output budget derived from the prompt length."""
+    return TraceSpec(profile=scenario.trace, requests=scenario.batch,
+                     prompt_len=scenario.seq,
+                     max_new=default_max_new(scenario.seq),
+                     seed=0 if seed is None else seed)

@@ -15,10 +15,16 @@ forwarded on the command line so isolated measurements stay comparable with
 in-process ones as regression baselines, and the worker's ``RunnerStats``
 ride back in the payload so out-of-process builds/compiles stay visible.
 
-Serve mode (``run_matrix(..., jobs=N)`` sharded dispatch, see
-``repro.runner.pool``):
+Pool mode (``--serve``; the ``run_matrix(..., jobs=N)`` sharded dispatch,
+see ``repro.runner.pool``):
 
     python -m repro.runner.worker --serve --runs 3 --warmup 1 ...
+
+NAMING: the ``--serve`` flag means "serve the pool protocol" — a
+persistent worker interpreter — and predates the serving *workload*
+(``Scenario(task="serve")``, the continuous-batching engine in
+``repro.launch.serve``).  The two are unrelated: a pool-mode worker can
+be handed scenarios of any task, including ``task="serve"`` cells.
 
 A persistent interpreter processing a *batch* of scenarios: one JSONL
 request per line on stdin —
@@ -94,6 +100,9 @@ def _run_cell(runner, scenario, hook, runs, warmup, lock_path):
     """One cell, with the measurement fence when a lock path is given:
     warm pass unfenced (build/compile/threading overlap across workers),
     timed loop under the exclusive lock (contention-free measurement)."""
+    # serve cells follow the same protocol: the warm pass replays the trace
+    # once on a fresh engine (building + compiling unfenced, overlapping
+    # other workers), and the fenced re-run replays it on the warm engine
     if not (lock_path and runner.reuse):
         return runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
                           record=False)
@@ -115,9 +124,11 @@ def _run_cell(runner, scenario, hook, runs, warmup, lock_path):
     return rr
 
 
-def _serve(args) -> int:
-    """Persistent batch loop: JSONL requests on stdin, replies on the
-    original stdout; workload output is rerouted to stderr."""
+def _serve_pool(args) -> int:
+    """Pool mode: persistent batch loop — JSONL requests on stdin, replies
+    on the original stdout; workload output is rerouted to stderr.  (This
+    "serves" the pool protocol; the inference-serving workload is
+    ``repro.launch.serve``, dispatched through here like any other task.)"""
     proto = os.fdopen(os.dup(sys.stdout.fileno()), "w", buffering=1)
     os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
 
@@ -149,7 +160,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", help="Scenario JSON dict (single-shot mode)")
     ap.add_argument("--serve", action="store_true",
-                    help="batch mode: JSONL requests on stdin, replies on stdout")
+                    help="pool mode: persistent worker, JSONL requests on "
+                         "stdin, replies on stdout (unrelated to the "
+                         "task=\"serve\" workload)")
     ap.add_argument("--runs", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--compile-warmup", type=int, default=3,
@@ -164,7 +177,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.serve:
-        return _serve(args)
+        return _serve_pool(args)
     if not (args.scenario and args.json):
         ap.error("single-shot mode needs --scenario and --json (or use --serve)")
 
