@@ -1,0 +1,90 @@
+"""Profile-driven inefficiency findings over the measured suite (the
+paper's use case 1: profile the benchmarks, find the optimization
+targets).
+
+Sweeps a step matrix + a serve cell through the shared BenchmarkRunner
+with ``profile=True`` (sharded under ``--jobs`` like every table), runs
+the rule-based detectors (``repro.profiler.detectors``) over the profiled
+RunResults, and emits a ranked findings report — CSV rows per finding,
+a human table on stderr-safe comment lines, and the full JSON (records'
+prof summaries + findings + tallies) in ``results/profile_report.json``.
+
+    PYTHONPATH=src python -m benchmarks.profile_report [--fast] [--jobs N]
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, make_runner, results_path
+from repro.profiler import build_report, detect, format_table
+from repro.runner import ScenarioMatrix
+
+STEP_ARCHS = ["gemma-2b", "mamba2-2.7b", "recurrentgemma-9b", "mixtral-8x7b"]
+
+
+def _step_matrix(fast: bool = False) -> ScenarioMatrix:
+    return ScenarioMatrix(archs=STEP_ARCHS[: 2 if fast else 4],
+                          tasks=("train", "infer_decode"),
+                          batches=(2,), seqs=(32,))
+
+
+def _serve_matrix(fast: bool = False) -> ScenarioMatrix:
+    # a bursty trace over few slots: the queue-saturation detector's beat
+    return ScenarioMatrix(archs=["gemma-2b"], tasks=("serve",),
+                          batches=(4 if fast else 8,), seqs=(8,),
+                          slots=(2,), traces=("bursty",))
+
+
+def scenario_matrices(fast: bool = False):
+    """The matrices this report executes (``benchmarks.run --list`` hook)."""
+    return [_step_matrix(fast), _serve_matrix(fast)]
+
+
+def _prof_summary(rec: dict) -> dict:
+    """A record's profile, minus the bulky timeline (JSON report diet)."""
+    extra = rec.get("extra") or {}
+    keep = {k: v for k, v in extra.items()
+            if k.startswith("prof_") and k != "prof_timeline"}
+    return {"name": rec["name"], "status": rec["status"],
+            "median_us": rec.get("median_us"),
+            "compile_us": rec.get("compile_us"),
+            "shard": extra.get("shard"), **keep}
+
+
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
+    results = runner.run_matrix(_step_matrix(fast), profile=True)
+    results += runner.run_matrix(_serve_matrix(fast), profile=True)
+    recs = [rr.to_dict() for rr in results]
+    findings = detect(recs)
+    report = build_report(recs, findings,
+                          meta={"fast": fast,
+                                "cells": [r["name"] for r in recs]})
+    for f in report["findings"]:
+        emit(f"profile_report/{f['rule']}/{f['cell']}", 0.0,
+             f"severity={f['severity']};score={f['score']:.2f}")
+    emit("profile_report/findings", 0.0,
+         f"n={len(report['findings'])};"
+         f"crit={report['by_severity'].get('crit', 0)};"
+         f"warn={report['by_severity'].get('warn', 0)};"
+         f"info={report['by_severity'].get('info', 0)};"
+         f"profiled={report['cells_profiled']}/{report['cells']}")
+    report["profiles"] = [_prof_summary(r) for r in recs]
+    with open(results_path("profile_report.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    for line in format_table(report).splitlines():
+        print(f"# {line}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="shard the profiled sweep across N workers")
+    args = ap.parse_args()
+    r = make_runner(jobs=args.jobs)
+    try:
+        main(fast=args.fast, runner=r)
+    finally:
+        r.close()

@@ -2,7 +2,8 @@
 executed through the unified ``repro.runner.BenchmarkRunner``.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
-        [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N] [--list]
+        [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N]
+        [--profile] [--list]
 
 ``--list`` prints the scenario names each matrix-driven table would run
 (after filter/exclude/skip selection) and exits without executing —
@@ -46,15 +47,21 @@ def main(argv=None) -> int:
                     help="one subprocess per scenario (fault containment)")
     ap.add_argument("--jobs", type=int, default=0,
                     help="shard matrix sweeps across N worker subprocesses")
+    ap.add_argument("--profile", action="store_true",
+                    help="measured profiling on every matrix cell: phase "
+                         "timelines + op-class attribution under "
+                         "extra['prof_*'] (src/repro/profiler/)")
     ap.add_argument("--refresh", action="store_true",
                     help="recompile cached dry-run cells (after config/model changes)")
     args = ap.parse_args(argv)
 
     from benchmarks import (batchsize, fig5_hardware, fig12_breakdown,
-                            fig34_compilers, roofline, runner_bench,
-                            serve_latency, table1_suite, table45_ci)
+                            fig34_compilers, profile_report, roofline,
+                            runner_bench, serve_latency, table1_suite,
+                            table45_ci)
     from benchmarks.common import make_runner
-    runner = make_runner(isolate=args.isolate, jobs=args.jobs)
+    runner = make_runner(isolate=args.isolate, jobs=args.jobs,
+                         profile=args.profile)
     runner.default_filter = tuple(args.filter)
     runner.default_exclude = tuple(args.exclude)
     runner.dryrun_refresh = args.refresh
@@ -67,6 +74,7 @@ def main(argv=None) -> int:
         "batchsize": batchsize.main,               # §2.2 batch-size search
         "roofline": roofline.main,                 # §Roofline deliverable
         "serve_latency": serve_latency.main,       # serving-latency table
+        "profile_report": profile_report.main,     # measured inefficiency findings
         "runner_bench": runner_bench.main,         # runner reuse speedup
     }
     if args.list:

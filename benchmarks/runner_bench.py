@@ -34,6 +34,13 @@ arch (``task="serve"``, bursty trace) dispatched through the same sharded
 pool, reporting tok/s per cell and the sweep wall next to the
 serial/isolated/sharded walls.
 
+Part 4 — profiling overhead: the same cell measured unprofiled then
+profiled (``profile=True``) on a warm executable cache; the reported
+ratio of median step times is the profiler's measurement tax (the
+acceptance bound is <10% — the phase split is two extra perf_counter
+reads per step, and the attribution compile happens outside the timed
+loop), so overhead regressions show up in the perf trajectory.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -202,6 +209,19 @@ def main(fast: bool = False, runner=None) -> None:
     emit("runner_bench/serve_sharded_s", serve_wall * 1e6,
          f"jobs={JOBS};{len(serve_rows)}_serve_cells")
 
+    # profiling overhead: unprofiled vs profiled median step time on a
+    # warm executable (fresh compile settled by the first run)
+    prof_runner = BenchmarkRunner(runs=max(3, runs))
+    sc = Scenario(arch=ARCH, task="train", batch=BATCH, seq=SEQ)
+    prof_runner.run(sc, record=False)                        # compile + settle
+    base_rr = prof_runner.run(sc, record=False)
+    prof_rr = prof_runner.run(sc, record=False, profile=True)
+    overhead = (prof_rr.median_us / base_rr.median_us
+                if base_rr.median_us else 0.0)
+    emit("runner_bench/profile_overhead", 0.0,
+         f"{overhead:.3f}x;profiled={prof_rr.median_us:.0f}us;"
+         f"base={base_rr.median_us:.0f}us")
+
     with open(results_path("runner_bench.json"), "w") as f:
         json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
                    "seed_path_s": seed_s, "runner_path_s": runner_s,
@@ -214,7 +234,11 @@ def main(fast: bool = False, runner=None) -> None:
                              "host_parallel_capacity": capacity,
                              "sharded_stats": shard_stats.to_dict()},
                    "serve": {"jobs": JOBS, "wall_s": serve_wall,
-                             "cells": serve_rows}},
+                             "cells": serve_rows},
+                   "profile": {"cell": sc.name,
+                               "base_median_us": base_rr.median_us,
+                               "profiled_median_us": prof_rr.median_us,
+                               "overhead_ratio": overhead}},
                   f, indent=1)
 
 

@@ -1,30 +1,136 @@
 #!/usr/bin/env python
-"""Hillclimb profiler: compile one cell and dump top instructions by bytes
-and the collective breakdown.  (The dry-run-profile counterpart of a trace.)
+"""Single-cell profiler dumps, two modes:
+
+Dry-run mode (default) — compile one production cell and dump top
+instructions by bytes and the collective breakdown (the compile-side
+counterpart of a trace):
 
     PYTHONPATH=src python scripts/dump_cell.py --arch X --shape Y [--opt]
         [--rules '{"act_seq": ["model"]}'] [--top 15]
+
+Measured mode (``--profile``) — run one *measured* cell through the
+BenchmarkRunner with profiling on and dump its phase timeline + op-class
+attribution JSON (interactive debugging for a regression: see at a glance
+whether compute, data movement, dispatch, or idle moved):
+
+    PYTHONPATH=src python scripts/dump_cell.py --profile --arch gemma-2b
+        [--task train] [--batch 2] [--seq 32] [--dtype fp32]
+        [--mode jit_donated] [--runs 3] [--json-out prof.json]
+
+The two modes need incompatible processes: the dry run forces 512
+placeholder host devices via XLA_FLAGS *before* jax initializes, while a
+measured run must keep the single real device — so the dryrun module is
+imported only on the dry-run path.
 """
-import os
-from repro.launch import dryrun  # sets XLA_FLAGS incl. the dump dir
-_DUMP = dryrun._DUMP_DIR
+import sys
+
+_PROFILE_MODE = "--profile" in sys.argv
+
+if not _PROFILE_MODE:
+    import os
+    from repro.launch import dryrun  # sets XLA_FLAGS incl. the dump dir
+    _DUMP = dryrun._DUMP_DIR
+
 import argparse
-import dataclasses as dc
 import json
-import re
 
-import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_arch, get_shape
-from repro.core import hloanalysis as H
-from repro.distributed import merge_rules, sharding_ctx, spec_tree
-from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import TrainHyper, make_decode_step, make_prefill_step, make_state_defs, make_train_step
-from repro.models.layers import abstract_tree
+def profile_cell(args) -> dict:
+    """One profiled measured cell -> its prof payload (JSON-able)."""
+    from repro.runner import BenchmarkRunner, Scenario
+    sc = Scenario(arch=args.arch, task=args.task, batch=args.batch,
+                  seq=args.seq, dtype=args.dtype, mode=args.mode)
+    runner = BenchmarkRunner(runs=args.runs)
+    rr = runner.run(sc, record=False, profile=True)
+    if rr.status != "ok":
+        raise SystemExit(f"{sc.name}: {rr.status}: {rr.error}")
+    return {
+        "scenario": sc.to_dict(),
+        "name": rr.name,
+        "median_us": rr.median_us,
+        "mean_us": rr.mean_us,
+        "compile_us": rr.compile_us,
+        "profile": {k: v for k, v in rr.extra.items()
+                    if k.startswith("prof_")},
+    }
+
+
+def profile_main(args) -> None:
+    payload = profile_cell(args)
+    text = json.dumps(payload, indent=1)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+    prof = payload["profile"]
+    fr = {k.replace("prof_frac_", ""): v for k, v in prof.items()
+          if k.startswith("prof_frac_")}
+    print(f"# {payload['name']}: median {payload['median_us']:.0f}us | "
+          + " ".join(f"{k}={v:.2f}" for k, v in sorted(fr.items()))
+          + f" (sum {sum(fr.values()):.3f})", file=sys.stderr)
+
+
+def dryrun_main(args) -> None:
+    import glob
+    import os
+    import re
+
+    from repro.core import hloanalysis as H
+
+    rules = json.loads(args.rules) if args.rules else None
+    compiled, mesh = compile_cell(args.arch, args.shape, args.opt, rules,
+                                  args.multi_pod)
+
+    files = sorted(glob.glob(os.path.join(_DUMP, "*after_spmd-partitioning*.txt")), key=os.path.getmtime)
+    text = open(files[-1]).read() if files else compiled.as_text()
+    print("source:", "post-spmd" if files else "compiled")
+    mod = H._Module(text, fused_bytes=bool(files))
+    rows, colls = [], []
+
+    def walk(comp, mult):
+        for ins in mod.computations.get(comp, ()):
+            ob, _ = H._shape_info(ins.type_str)
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                walk(bm.group(1), mult * (mod.trip_count(cm.group(1)) or 1))
+                continue
+            if ins.op in H._SKIP_BYTES_OPS or ins.op.endswith("-done"):
+                continue
+            if mod.fused_bytes and ins.op in H._ELEMENTWISE_OPS:
+                continue
+            inb = mod._operand_bytes(comp, ins)
+            rows.append(((ob + inb) * mult, ins.op, mult, ins.type_str[:58]))
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in H.COLLECTIVE_OPS:
+                colls.append(((ob + inb) * mult, base, mult, ins.type_str[:58]))
+
+    walk(mod.entry, 1)
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total bytes/dev {total/1e12:.2f} TB")
+    for b, op, mult, t in rows[: args.top]:
+        print(f"  {b/1e12:7.3f}TB x{mult:5d} {op:10s} {t}")
+    colls.sort(reverse=True)
+    print("top collectives:")
+    for b, op, mult, t in colls[:8]:
+        print(f"  {b/1e9:8.2f}GB x{mult:5d} {op:12s} {t}")
 
 
 def compile_cell(arch, shape_name, opt, rules_override=None, multi_pod=False):
+    import dataclasses as dc
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_arch, get_shape
+    from repro.distributed import merge_rules, sharding_ctx, spec_tree
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (TrainHyper, make_decode_step,
+                                    make_prefill_step, make_state_defs,
+                                    make_train_step)
+    from repro.models.layers import abstract_tree
+
     cfg = get_arch(arch)
     if opt:
         cfg = dc.replace(cfg, **dryrun.OPT_CFG)
@@ -63,50 +169,31 @@ def compile_cell(arch, shape_name, opt, rules_override=None, multi_pod=False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--profile", action="store_true",
+                    help="measured mode: profiled BenchmarkRunner cell "
+                         "instead of a dry-run compile")
+    # dry-run mode
+    ap.add_argument("--shape", default=None)
     ap.add_argument("--opt", action="store_true")
     ap.add_argument("--rules", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--top", type=int, default=14)
+    # measured mode
+    ap.add_argument("--task", default="train")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--dtype", default="fp32")
+    ap.add_argument("--mode", default="jit_donated")
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--json-out", default=None,
+                    help="also write the profile JSON here")
     args = ap.parse_args()
-    rules = json.loads(args.rules) if args.rules else None
-    compiled, mesh = compile_cell(args.arch, args.shape, args.opt, rules, args.multi_pod)
-
-    import glob
-    files = sorted(glob.glob(os.path.join(_DUMP, "*after_spmd-partitioning*.txt")), key=os.path.getmtime)
-    text = open(files[-1]).read() if files else compiled.as_text()
-    print("source:", "post-spmd" if files else "compiled")
-    mod = H._Module(text, fused_bytes=bool(files))
-    rows, colls = [], []
-
-    def walk(comp, mult):
-        for ins in mod.computations.get(comp, ()):
-            ob, _ = H._shape_info(ins.type_str)
-            if ins.op == "while":
-                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
-                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
-                walk(bm.group(1), mult * (mod.trip_count(cm.group(1)) or 1))
-                continue
-            if ins.op in H._SKIP_BYTES_OPS or ins.op.endswith("-done"):
-                continue
-            if mod.fused_bytes and ins.op in H._ELEMENTWISE_OPS:
-                continue
-            inb = mod._operand_bytes(comp, ins)
-            rows.append(((ob + inb) * mult, ins.op, mult, ins.type_str[:58]))
-            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
-            if base in H.COLLECTIVE_OPS:
-                colls.append(((ob + inb) * mult, base, mult, ins.type_str[:58]))
-
-    walk(mod.entry, 1)
-    rows.sort(reverse=True)
-    total = sum(r[0] for r in rows)
-    print(f"total bytes/dev {total/1e12:.2f} TB")
-    for b, op, mult, t in rows[: args.top]:
-        print(f"  {b/1e12:7.3f}TB x{mult:5d} {op:10s} {t}")
-    colls.sort(reverse=True)
-    print("top collectives:")
-    for b, op, mult, t in colls[:8]:
-        print(f"  {b/1e9:8.2f}GB x{mult:5d} {op:12s} {t}")
+    if args.profile:
+        profile_main(args)
+    else:
+        if not args.shape:
+            ap.error("dry-run mode needs --shape (or use --profile)")
+        dryrun_main(args)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,25 @@ assert len(rr.extra["tokens"]) == 4
 print("serve smoke OK")
 EOF
 
+echo "== profiled cell: measured timeline + attribution through the runner =="
+python - <<'EOF'
+from repro.runner import BenchmarkRunner, Scenario
+
+runner = BenchmarkRunner(runs=2)
+rr = runner.run(Scenario(arch="gemma-2b", task="train", batch=1, seq=8),
+                profile=True, record=False)
+assert rr.status == "ok", rr.error
+fracs = {k: v for k, v in rr.extra.items() if k.startswith("prof_frac_")}
+total = sum(fracs.values())
+assert abs(total - 1.0) < 0.05, fracs
+assert rr.extra["prof_steps"] == 2 and rr.extra["prof_flops"] > 0
+print("  " + rr.name + ": " +
+      " ".join(f"{k.replace('prof_frac_', '')}={v:.2f}"
+               for k, v in sorted(fracs.items())) +
+      f" (sum {total:.3f})")
+print("profiled smoke OK")
+EOF
+
 echo "== sharded dispatch: 2-cell matrix across --jobs 2 workers =="
 python - <<'EOF'
 from repro.runner import BenchmarkRunner, ScenarioMatrix

@@ -1,14 +1,22 @@
 """Execution-time breakdown (paper Figs. 1-2 / Table 2 analogue).
 
 TorchBench decomposes wall time into GPU-active / data-movement / idle with
-a profiler.  On the TPU target (no profiler in this container) the same
-decomposition is derived from the dry-run roofline terms:
+a profiler.  Two sources feed the same row/table shape here, each row
+labeled with its provenance so mixed tables stay unambiguous:
 
-    busy fraction     = compute_s / step_upper           (MXU active)
-    data movement     = memory_s / step_upper            (HBM-bound exposure)
-    idle (comm-bound) = collective_s / step_upper        (ICI wait)
+* ``source="measured"`` — the measured profiling subsystem
+  (``src/repro/profiler/``): per-cell phase timelines + op-class
+  attribution recorded by a profiled runner sweep.  Fractions are of
+  *measured* step time and include the dispatch/idle shares the analytic
+  model cannot see.
+* ``source="analytic"`` — the dry-run roofline estimate (no real device
+  for the production shapes in this container):
 
-and aggregated per domain exactly like the paper's Table 2.
+      busy fraction     = compute_s / step_upper         (MXU active)
+      data movement     = memory_s / step_upper          (HBM-bound exposure)
+      idle (comm-bound) = collective_s / step_upper      (ICI wait)
+
+Both aggregate per domain exactly like the paper's Table 2.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ from repro.configs import ARCHS
 
 
 def breakdown_rows(dryrun_results: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Analytic rows from dry-run cells (roofline-term fractions)."""
     rows = []
     for r in dryrun_results:
         if "roofline" not in r:
@@ -34,6 +43,43 @@ def breakdown_rows(dryrun_results: Iterable[Dict[str, Any]]) -> List[Dict[str, A
             "memory_frac": rl["memory_s"] / total,
             "collective_frac": rl["collective_s"] / total,
             "dominant": rl["dominant"],
+            "source": "analytic",
+        })
+    return rows
+
+
+def measured_breakdown_rows(results: Iterable[Any]) -> List[Dict[str, Any]]:
+    """Measured rows from profiled RunResults (dicts or RunResult objects).
+
+    Same row shape as ``breakdown_rows`` — ``shape`` holds the task so the
+    train/inference split works — plus the measured-only ``dispatch_frac``
+    / ``idle_frac`` columns (the three roofline fractions deliberately do
+    NOT sum to 1 on measured rows: the remainder is measured overhead).
+    Cells without a profile (errors, eager, unprofiled) are skipped."""
+    rows = []
+    for r in results:
+        rec = r.to_dict() if hasattr(r, "to_dict") else dict(r)
+        extra = rec.get("extra") or {}
+        if rec.get("status") != "ok" or "prof_frac_compute" not in extra:
+            continue
+        fracs = {
+            "compute": extra["prof_frac_compute"],
+            "memory": extra["prof_frac_memory"],
+            "collective": extra["prof_frac_collective"],
+            "dispatch": extra["prof_frac_dispatch"],
+            "idle": extra["prof_frac_idle"],
+        }
+        rows.append({
+            "arch": rec["arch"], "shape": rec["task"], "mesh": "host",
+            "domain": ARCHS[rec["arch"]].domain if rec["arch"] in ARCHS else "?",
+            "compute_frac": fracs["compute"],
+            "memory_frac": fracs["memory"],
+            "collective_frac": fracs["collective"],
+            "dispatch_frac": fracs["dispatch"],
+            "idle_frac": fracs["idle"],
+            "dominant": max(fracs, key=fracs.get),
+            "source": "measured",
+            "cell": rec["name"],
         })
     return rows
 

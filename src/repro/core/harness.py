@@ -117,13 +117,21 @@ def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] =
             *, runs: int = 10, warmup: int = 1,
             hook: Optional[RegressionHook] = None,
             jitted: Optional[Callable] = None,
-            final_args: Optional[list] = None) -> Measurement:
+            final_args: Optional[list] = None,
+            phase_log: Optional[list] = None) -> Measurement:
     """Paper protocol: median-of-N timing of the jitted computation phase.
 
     ``jitted`` lets a caller (the BenchmarkRunner) reuse an already-compiled
     executable; ``final_args`` (a mutable list) receives the threaded
     steady-state arguments so the caller can keep them valid across calls
     when buffers are donated.
+
+    ``phase_log`` (a mutable list) is the profiler hook: it receives one
+    ``(dispatch_s, device_s)`` tuple per *measured* step — the time until
+    the async jitted call returns vs the ``block_until_ready`` wait.  The
+    split costs one extra ``perf_counter`` read per step and is taken only
+    when a log is passed, so unprofiled measurements are byte-identical to
+    the pre-profiler protocol.
     """
     gc.collect()
     dev0 = _live_device_bytes()
@@ -142,13 +150,17 @@ def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] =
     for i in range(warmup + runs):
         t0 = time.perf_counter()
         out = jitted(*cur_args)
+        t_disp = time.perf_counter() if phase_log is not None else 0.0
         jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) * 1e6
+        t_done = time.perf_counter()
+        dt = (t_done - t0) * 1e6
         if hook is not None:
             hook.fire()
             dt += (hook.slowdown_s * 1e6)
         if i >= warmup:
             times.append(dt)
+            if phase_log is not None:
+                phase_log.append((t_disp - t0, t_done - t_disp))
         cur_args = _thread(out, cur_args, donate)
     _, host_peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()

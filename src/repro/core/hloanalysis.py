@@ -51,6 +51,32 @@ COLLECTIVE_OPS = (
     "collective-permute",
 )
 
+#: time-attribution op classes (profiler subsystem, src/repro/profiler/):
+#:   matmul      dot / convolution contractions (MXU work)
+#:   attention   custom attention kernels (pallas / flash custom-calls;
+#:               plain dot-product attention lowers to dots -> matmul)
+#:   collective  inter-chip communication
+#:   elementwise fusible pointwise ops
+#:   other       everything else (reductions, slices, scatter/gather, ...)
+OP_CLASSES = ("matmul", "attention", "collective", "elementwise", "other")
+
+_ATTENTION_CALL_RE = re.compile(r"attention|flash|pallas|rglru|ssd|mosaic",
+                                re.IGNORECASE)
+
+
+def op_class(op: str, rest: str = "") -> str:
+    """The attribution class of one HLO opcode (see OP_CLASSES)."""
+    base = op[:-6] if op.endswith("-start") else op
+    if base in COLLECTIVE_OPS:
+        return "collective"
+    if op in ("dot", "convolution"):
+        return "matmul"
+    if op == "custom-call":
+        return "attention" if _ATTENTION_CALL_RE.search(rest or "") else "other"
+    if op in _ELEMENTWISE_OPS:
+        return "elementwise"
+    return "other"
+
 
 def _shape_info(type_str: str) -> Tuple[int, int]:
     """-> (total bytes, elems of first array) for a possibly-tuple type."""
@@ -94,6 +120,18 @@ class HloCost:
     collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     collective_bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
     notes: List[str] = dataclasses.field(default_factory=list)
+    # per-op-class tallies (see OP_CLASSES); invariants maintained by the
+    # walker: sum(flops_by_class) == flops, sum(bytes_by_class) == bytes_accessed
+    flops_by_class: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bytes_by_class: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def tally_flops(self, cls: str, flops: float) -> None:
+        self.flops += flops
+        self.flops_by_class[cls] = self.flops_by_class.get(cls, 0.0) + flops
+
+    def tally_bytes(self, cls: str, nbytes: float) -> None:
+        self.bytes_accessed += nbytes
+        self.bytes_by_class[cls] = self.bytes_by_class.get(cls, 0.0) + nbytes
 
     def add(self, other: "HloCost", mult: float = 1.0) -> None:
         self.flops += other.flops * mult
@@ -103,6 +141,10 @@ class HloCost:
             self.collective_counts[k] = self.collective_counts.get(k, 0) + int(v * mult)
         for k, v in other.collective_bytes_by_op.items():
             self.collective_bytes_by_op[k] = self.collective_bytes_by_op.get(k, 0.0) + v * mult
+        for k, v in other.flops_by_class.items():
+            self.flops_by_class[k] = self.flops_by_class.get(k, 0.0) + v * mult
+        for k, v in other.bytes_by_class.items():
+            self.bytes_by_class[k] = self.bytes_by_class.get(k, 0.0) + v * mult
 
 
 _SKIP_BYTES_OPS = {
@@ -248,6 +290,10 @@ class _Module:
 
         if op in ("call", "fusion"):
             m = _CALLS_RE.search(ins.rest)
+            # the fusion's HBM traffic gets the class of its dominant inner
+            # FLOPs contributor (a matmul fusion's reads are matmul reads);
+            # pure-pointwise fusions fall back to elementwise
+            bytes_cls = "elementwise"
             if m:
                 inner = self.cost_of(m.group(1))
                 c.flops += inner.flops
@@ -256,8 +302,13 @@ class _Module:
                     c.collective_counts[k] = c.collective_counts.get(k, 0) + v
                 for k, v in inner.collective_bytes_by_op.items():
                     c.collective_bytes_by_op[k] = c.collective_bytes_by_op.get(k, 0.0) + v
+                for k, v in inner.flops_by_class.items():
+                    c.flops_by_class[k] = c.flops_by_class.get(k, 0.0) + v
+                if inner.flops_by_class:
+                    bytes_cls = max(inner.flops_by_class,
+                                    key=inner.flops_by_class.get)
             # fusion HBM traffic = its own operands + result (interior is on-chip)
-            c.bytes_accessed += out_bytes + self._operand_bytes(comp, ins)
+            c.tally_bytes(bytes_cls, out_bytes + self._operand_bytes(comp, ins))
             return
 
         if op == "conditional":
@@ -268,7 +319,7 @@ class _Module:
                 if bc.flops >= best.flops:
                     best = bc
             c.add(best)
-            c.bytes_accessed += out_bytes + self._operand_bytes(comp, ins)
+            c.tally_bytes("other", out_bytes + self._operand_bytes(comp, ins))
             return
 
         base_op = op[:-6] if op.endswith("-start") else op
@@ -283,7 +334,7 @@ class _Module:
             c.collective_bytes += wire
             c.collective_counts[base_op] = c.collective_counts.get(base_op, 0) + 1
             c.collective_bytes_by_op[base_op] = c.collective_bytes_by_op.get(base_op, 0.0) + wire
-            c.bytes_accessed += out_bytes + in_bytes
+            c.tally_bytes("collective", out_bytes + in_bytes)
             return
         if op.endswith("-done"):
             return
@@ -291,6 +342,7 @@ class _Module:
         if op in _SKIP_BYTES_OPS:
             return
 
+        cls = op_class(op, ins.rest)
         # FLOPs
         if op == "dot":
             lhs_t = self._type_of(comp, ins.operands[0]) if ins.operands else None
@@ -302,7 +354,7 @@ class _Module:
                     i = int(idx)
                     if i < len(dims):
                         contract *= dims[i]
-            c.flops += 2.0 * out_elems * contract
+            c.tally_flops(cls, 2.0 * out_elems * contract)
         elif op == "convolution":
             rhs_t = self._type_of(comp, ins.operands[1]) if len(ins.operands) > 1 else None
             kdims = _dims_of(rhs_t) if rhs_t else []
@@ -310,15 +362,15 @@ class _Module:
             for d in kdims:
                 kelems *= d
             out_feat = kdims[-1] if kdims else 1
-            c.flops += 2.0 * out_elems * (kelems / max(out_feat, 1))
+            c.tally_flops(cls, 2.0 * out_elems * (kelems / max(out_feat, 1)))
         elif op in ("custom-call", "sort", "rng", "rng-bit-generator"):
             pass  # negligible / opaque
         else:
-            c.flops += float(out_elems)   # elementwise estimate
+            c.tally_flops(cls, float(out_elems))   # elementwise estimate
 
         if self.fused_bytes and op in _ELEMENTWISE_OPS:
             return   # fuses into neighbours on TPU: no HBM round-trip
-        c.bytes_accessed += out_bytes + self._operand_bytes(comp, ins)
+        c.tally_bytes(cls, out_bytes + self._operand_bytes(comp, ins))
 
 
 def analyze_hlo(hlo_text: str, fused_bytes: bool = False) -> HloCost:

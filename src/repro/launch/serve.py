@@ -105,7 +105,15 @@ class ServeEngine:
         self._pos_bound = max(self._pos_bound, len(req.prompt))
         return int(jnp.argmax(logits[0, -1]))
 
-    def run(self, requests: List[Request], *, hook=None) -> Dict[str, Any]:
+    def lowered_decode(self):
+        """Lower the jitted decode step against the engine's live state —
+        the profiler's attribution source (lowering an already-traced call
+        is ~1 ms; the caller pays/caches the AOT compile)."""
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        return self._decode.lower(self.params, toks, self.cache)
+
+    def run(self, requests: List[Request], *, hook=None,
+            phase_log: Optional[list] = None) -> Dict[str, Any]:
         """Replay a trace; returns throughput + raw latency samples.
 
         Admission is driven by the decode-step counter (virtual time):
@@ -117,6 +125,9 @@ class ServeEngine:
 
         ``hook`` is an optional ``RegressionHook`` fired once per decode
         step, so injected-slowdown CI probes work on serve cells too.
+        ``phase_log`` is the profiler hook: one ``(dispatch_s, device_s)``
+        tuple per batched decode step — the split is taken only when a log
+        is passed, so unprofiled replays keep the pre-profiler timing.
         """
         self._reset()
         upcoming = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
@@ -173,7 +184,12 @@ class ServeEngine:
             ts = time.perf_counter()
             toks = jnp.asarray(next_tok[:, None])
             logits, self.cache = self._decode(self.params, toks, self.cache)
+            t_disp = time.perf_counter() if phase_log is not None else 0.0
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            if phase_log is not None:
+                # dispatch ends when the async decode call returns; the
+                # argmax readback above forced the device sync
+                phase_log.append((t_disp - ts, time.perf_counter() - t_disp))
             if hook is not None:
                 hook.fire()   # inside the timed sample, like harness.measure
             dt = time.perf_counter() - ts

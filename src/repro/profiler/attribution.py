@@ -1,0 +1,152 @@
+"""Measured op-class time attribution: merge a cell's measured phase
+timeline with its trip-count-aware HLO op-class costs.
+
+The analytic breakdown (``core/breakdown.py``) can only say what the
+hardware *should* do; this module says where the measured time *went*:
+
+* the measured **dispatch** share is taken directly from the timeline;
+* the measured **device** share is distributed over the HLO op classes
+  (``hloanalysis.OP_CLASSES``: matmul / attention / collective /
+  elementwise / other) proportionally to each class's roofline time —
+  ``max(flops_c / peak, bytes_c / hbm_bw)`` per class, collective wire
+  bytes over link bandwidth — so the *relative* weights survive running
+  on a host much slower than the modeled accelerator;
+* each non-collective class's share is further split into **compute** vs
+  **memory** by its own flops-time : bytes-time ratio, giving measured
+  compute / memory / collective / dispatch / idle fractions that sum to
+  exactly 1.0 per cell (the acceptance invariant).
+
+``util`` is the roofline-utilization proxy: the cell's analytic device
+bound over its measured device time.  Its absolute value is only
+meaningful on the modeled hardware; the inefficiency detectors therefore
+compare it *across* cells of one sweep (host speed cancels out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+from repro.core.hardware import DEFAULT_HW, HardwareProfile
+from repro.core.hloanalysis import OP_CLASSES, HloCost, analyze_hlo
+
+from repro.profiler.timeline import Timeline
+
+
+@dataclasses.dataclass
+class Attribution:
+    """Measured time attribution for one profiled cell."""
+    class_us: Dict[str, float]      # measured device us per op class
+    class_frac: Dict[str, float]    # same, as fractions of device time
+    frac_compute: float
+    frac_memory: float
+    frac_collective: float
+    frac_dispatch: float
+    frac_idle: float
+    bound_us: float                 # analytic roofline device bound
+    util: float                     # bound_us / measured device us
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    source: str = "measured"
+
+    def fractions(self) -> Dict[str, float]:
+        return {"compute": self.frac_compute, "memory": self.frac_memory,
+                "collective": self.frac_collective,
+                "dispatch": self.frac_dispatch, "idle": self.frac_idle}
+
+    def to_extra(self) -> Dict[str, Any]:
+        """The attribution's share of the well-known ``extra["prof_*"]``
+        keys (see ``repro/runner/results.py``)."""
+        return {
+            "prof_source": self.source,
+            "prof_frac_compute": self.frac_compute,
+            "prof_frac_memory": self.frac_memory,
+            "prof_frac_collective": self.frac_collective,
+            "prof_frac_dispatch": self.frac_dispatch,
+            "prof_frac_idle": self.frac_idle,
+            "prof_class_us": {k: round(v, 2)
+                              for k, v in self.class_us.items()},
+            "prof_class_frac": dict(self.class_frac),
+            "prof_bound_us": self.bound_us,
+            "prof_util": self.util,
+            "prof_flops": self.flops,
+            "prof_bytes": self.bytes_accessed,
+            "prof_collective_bytes": self.collective_bytes,
+        }
+
+
+def class_times(cost: HloCost,
+                hw: HardwareProfile = DEFAULT_HW
+                ) -> Dict[str, Tuple[float, float, float]]:
+    """Per-class roofline terms ``{class: (flops_s, bytes_s, bound_s)}``.
+
+    The collective class is bounded by its wire bytes over link bandwidth
+    (its HBM-side bytes stay in the memory term like any other class's)."""
+    out: Dict[str, Tuple[float, float, float]] = {}
+    for cls in OP_CLASSES:
+        f_s = cost.flops_by_class.get(cls, 0.0) / hw.peak_flops_bf16
+        b_s = cost.bytes_by_class.get(cls, 0.0) / hw.hbm_bw
+        bound = max(f_s, b_s)
+        if cls == "collective":
+            bound = max(bound, cost.collective_bytes / hw.link_bw)
+        out[cls] = (f_s, b_s, bound)
+    return out
+
+
+def attribute(timeline: Timeline, cost: HloCost,
+              hw: HardwareProfile = DEFAULT_HW) -> Attribution:
+    """Distribute the timeline's measured time over op classes and the
+    compute/memory/collective/dispatch/idle decomposition.
+
+    The five fractions sum to exactly 1.0 whenever the timeline has any
+    time at all; device time the HLO costs cannot explain (an empty or
+    unparseable module) lands in ``idle``, never silently vanishes."""
+    disp = timeline.dispatch_us
+    dev = timeline.device_us
+    idle = timeline.idle_us
+    total = disp + dev + idle
+    per_class = class_times(cost, hw)
+    weight = sum(b for _, _, b in per_class.values())
+    class_us = {cls: 0.0 for cls in OP_CLASSES}
+    unattributed = dev
+    if weight > 0.0 and dev > 0.0:
+        class_us = {cls: dev * b / weight
+                    for cls, (_, _, b) in per_class.items()}
+        unattributed = 0.0
+    frac_compute = frac_memory = 0.0
+    if total > 0.0:
+        for cls, (f_s, b_s, _) in per_class.items():
+            if cls == "collective" or f_s + b_s == 0.0:
+                continue
+            share = class_us[cls] / total
+            frac_compute += share * (f_s / (f_s + b_s))
+            frac_memory += share * (b_s / (f_s + b_s))
+    # util compares the ONE-step analytic bound against the measured
+    # PER-STEP device time — never the whole-timeline sum, which would
+    # scale utilization by 1/steps and skew cells with different sample
+    # counts (a serve cell's N decode steps vs a step cell's N runs)
+    dev_per_step = dev / timeline.steps if timeline.steps else 0.0
+    return Attribution(
+        class_us=class_us,
+        class_frac={cls: (us / dev if dev else 0.0)
+                    for cls, us in class_us.items()},
+        frac_compute=frac_compute,
+        frac_memory=frac_memory,
+        frac_collective=class_us["collective"] / total if total else 0.0,
+        frac_dispatch=disp / total if total else 0.0,
+        frac_idle=(idle + unattributed) / total if total else 0.0,
+        bound_us=weight * 1e6,
+        util=(weight * 1e6) / dev_per_step if dev_per_step else 0.0,
+        flops=cost.flops, bytes_accessed=cost.bytes_accessed,
+        collective_bytes=cost.collective_bytes)
+
+
+def cost_for_executable(lower: Callable[[], Any]) -> HloCost:
+    """Trip-count-aware HLO cost for an already-traced jitted callable.
+
+    ``lower`` is a thunk returning ``jitted.lower(*args)`` — lowering an
+    already-traced call is ~1 ms, but the AOT ``compile()`` here is a
+    fresh XLA compile (seconds); callers cache the returned cost per
+    scenario (``BenchmarkRunner._prof_costs``) so repeated profiled
+    re-measures pay it once.  Runs strictly outside any timed region."""
+    return analyze_hlo(lower().compile().as_text())

@@ -269,11 +269,14 @@ class ShardScheduler:
     def run(self, scenarios: Sequence[Scenario], *,
             hooks: Optional[dict] = None,
             runs: Optional[int] = None, warmup: Optional[int] = None,
+            profile: bool = False,
             on_result: Optional[Callable[[RunResult], None]] = None):
         """Run every scenario, sharded by build_key; returns
         ``(results_in_input_order, run_stats)`` where ``run_stats`` is a
         ``RunnerStats`` of everything the workers did *during this call*.
 
+        ``profile`` rides in every job message, so workers record the
+        measured ``extra["prof_*"]`` payload exactly like the serial path.
         ``on_result`` fires from worker-reader threads as cells complete
         (the ResultStore append path is thread-safe for exactly this).
         """
@@ -288,7 +291,7 @@ class ShardScheduler:
             t = threading.Thread(
                 target=self._drive,
                 args=(worker, idxs, scenarios, hooks or {}, runs, warmup,
-                      results, run_stats, on_result),
+                      profile, results, run_stats, on_result),
                 name=f"shard-{worker.idx}", daemon=True)
             threads.append(t)
             t.start()
@@ -298,7 +301,7 @@ class ShardScheduler:
 
     def _drive(self, worker: _Worker, idxs: List[int],
                scenarios: Sequence[Scenario], hooks: dict,
-               runs: Optional[int], warmup: Optional[int],
+               runs: Optional[int], warmup: Optional[int], profile: bool,
                results: List[Optional[RunResult]], run_stats,
                on_result: Optional[Callable[[RunResult], None]]) -> None:
         """One worker's shard, sequentially; crashes cost one cell each."""
@@ -312,7 +315,8 @@ class ShardScheduler:
                     worker.stats_seen = {}   # fresh interpreter: from zero
                 hook = hooks.get(sc.name) or hooks.get(sc.bench)
                 job = {"op": "run", "scenario": sc.to_dict(),
-                       "runs": runs, "warmup": warmup}
+                       "runs": runs, "warmup": warmup,
+                       "profile": profile}
                 if hook is not None:
                     job["hook"] = {
                         "slowdown_s": getattr(hook, "slowdown_s", 0.0),

@@ -54,6 +54,51 @@ decode latencies* (not step times) and ``runs`` is the request count:
                                   the serial-vs-sharded determinism witness
     extra["tokens_digest"] str    sha256 of extra["tokens"]
 
+Profiled cells (``run(..., profile=True)`` / ``benchmarks.run --profile``;
+the measured profiling subsystem ``src/repro/profiler/``) additionally
+carry the phase timeline + op-class attribution (still schema v1; eager
+cells record only ``extra["prof_skipped"]="eager"`` — no compiled module):
+
+    extra["prof_kind"]     str    "step" (train/infer cells: one sample per
+                                  measured iteration) | "decode_step"
+                                  (serve: one per batched decode step)
+    extra["prof_steps"]    int    profiled samples
+    extra["prof_timeline"] list   [dispatch_us, device_us] per sample,
+                                  capped at profiler.TIMELINE_CAP (128)
+    extra["prof_dispatch_us_mean"|"prof_device_us_mean"]   phase means:
+                                  host dispatch (jitted call returning) vs
+                                  device execution (block_until_ready wait)
+    extra["prof_idle_us"]  float  serve only: measured replay wall outside
+                                  decode steps (admission, prefill, queue)
+    extra["prof_frac_compute"|"prof_frac_memory"|"prof_frac_collective"
+         |"prof_frac_dispatch"|"prof_frac_idle"]
+                           float  measured time decomposition; the five
+                                  fractions sum to 1.0 per cell (device
+                                  time is split over HLO op classes by
+                                  their roofline weights, then into
+                                  compute vs memory per class; device time
+                                  the HLO costs can't explain lands in
+                                  idle, never vanishes)
+    extra["prof_class_us"|"prof_class_frac"]   dict   measured device time
+                                  per op class (hloanalysis.OP_CLASSES:
+                                  matmul/attention/collective/elementwise/
+                                  other), us and fraction-of-device-time
+    extra["prof_flops"|"prof_bytes"|"prof_collective_bytes"]   the
+                                  trip-count-aware HLO costs backing the
+                                  attribution
+    extra["prof_bound_us"] float  the cell's analytic roofline device
+                                  bound (modeled hardware)
+    extra["prof_util"]     float  bound/measured device time — roofline-
+                                  utilization proxy; compare across cells
+                                  of one sweep, not across hosts
+    extra["prof_device_peak_bytes"|"prof_device_bytes_in_use"]   backend
+                                  memory stats, present only when the
+                                  device exposes memory_stats() (TPU/GPU;
+                                  absent on CPU)
+    extra["prof_error"]    str    attribution failed (timeline-only
+                                  profile); the cell's status stays "ok"
+    extra["prof_skipped"]  str    why no profile was recorded ("eager")
+
 ``ResultStore`` — the persistence layer:
 
     * an append-only JSONL run log (full history, one record per line);

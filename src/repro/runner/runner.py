@@ -34,6 +34,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.harness import (Measurement, RegressionHook, measure,
                                 measure_eager, prepare)
 from repro.core.suite import Benchmark, Built, build_arch, get_benchmark
+from repro.profiler.attribution import attribute, cost_for_executable
+from repro.profiler.timeline import Timeline, device_memory_stats
 from repro.runner.latency import percentile
 from repro.runner.pool import ShardScheduler, _subprocess_env
 from repro.runner.traces import cache_len_bound, spec_for_scenario
@@ -78,7 +80,7 @@ class BenchmarkRunner:
     def __init__(self, store: Optional[ResultStore] = None, *,
                  runs: int = 5, warmup: int = 1, compile_warmup: int = 3,
                  reuse: bool = True, isolate: bool = False, jobs: int = 0,
-                 measure_fence: bool = True):
+                 measure_fence: bool = True, profile: bool = False):
         self.store = store
         self.runs = runs
         self.warmup = warmup
@@ -95,6 +97,10 @@ class BenchmarkRunner:
         # wants); throughput-only sweeps may turn it off
         self.jobs = jobs
         self.measure_fence = measure_fence
+        # measured profiling (src/repro/profiler/): per-step phase
+        # timelines + op-class attribution under extra["prof_*"]; per-call
+        # override via run(..., profile=...)
+        self.profile = profile
         # session-level scenario selection (the CLI --filter/--exclude
         # regexes), applied on top of each matrix's own selection
         self.default_filter: Tuple[str, ...] = ()
@@ -108,6 +114,11 @@ class BenchmarkRunner:
         # (build_key, max_len) — the serving analogue of _execs
         self._serve_engines: Dict[Tuple, Any] = {}
         self._dryrun_mem: Dict[str, dict] = {}
+        # profiled cells' HLO op-class costs, keyed like the executable
+        # they describe (scenario for step cells, engine key for serve) —
+        # the attribution AOT compile is paid once per executable, not per
+        # profiled re-measure
+        self._prof_costs: Dict[Any, Any] = {}
         self._pool: Optional[ShardScheduler] = None
 
     def close(self) -> None:
@@ -165,21 +176,31 @@ class BenchmarkRunner:
 
     def run(self, scenario: Scenario, *, hook: Optional[RegressionHook] = None,
             runs: Optional[int] = None, warmup: Optional[int] = None,
-            record: bool = True) -> RunResult:
+            record: bool = True, profile: Optional[bool] = None) -> RunResult:
         """Execute one scenario and return its RunResult (never raises for
         benchmark failures — they come back as status="error" records).
 
         ``task="serve"`` cells run the continuous-batching engine over the
         scenario's trace instead of the ``measure()`` step protocol;
         ``runs``/``warmup`` don't apply there (the trace defines the work).
+
+        ``profile`` (default: the runner's ``profile`` setting) captures a
+        per-step phase timeline during the SAME timed loop and attributes
+        it over HLO op classes (``repro.profiler``); the profile lands
+        under ``extra["prof_*"]``.  Eager cells can't profile (no compiled
+        module, synchronous dispatch) and record ``prof_skipped`` instead.
         """
+        prof = self.profile if profile is None else profile
         if self.isolate:
             return self._run_isolated(scenario, hook=hook, runs=runs,
-                                      warmup=warmup, record=record)
+                                      warmup=warmup, record=record,
+                                      profile=prof)
         if scenario.task == "serve":
-            return self._run_serve(scenario, hook=hook, record=record)
+            return self._run_serve(scenario, hook=hook, record=record,
+                                   profile=prof)
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
+        phase_log: Optional[List[Tuple[float, float]]] = None
         try:
             entry, cache = self._resolve(scenario)
             if scenario.mode == "eager":
@@ -187,6 +208,8 @@ class BenchmarkRunner:
                                   runs=max(2, (runs or self.runs) // 2),
                                   hook=hook)
             else:
+                if prof:
+                    phase_log = []
                 final_args: List[Tuple] = []
                 wu = self.warmup if warmup is None else warmup
                 if not cache.get("executable_reused"):
@@ -194,7 +217,7 @@ class BenchmarkRunner:
                 m = measure(scenario.name, entry.step, entry.args, entry.donate,
                             runs=runs or self.runs, warmup=wu,
                             hook=hook, jitted=entry.jitted,
-                            final_args=final_args)
+                            final_args=final_args, phase_log=phase_log)
                 if self.reuse and final_args:
                     # donated buffers were consumed: keep the threaded args
                     # so the cached executable stays callable next time
@@ -205,6 +228,13 @@ class BenchmarkRunner:
                 # nothing compiled on a cache hit; measure()'s first call
                 # timed an ordinary step, which is not a compile time
                 rr.compile_us = 0.0
+            if prof:
+                if scenario.mode == "eager":
+                    rr.extra["prof_skipped"] = "eager"
+                else:
+                    rr.extra.update(self._profile_extra(
+                        scenario, phase_log,
+                        lambda: entry.jitted.lower(*entry.args)))
         except Exception as e:  # noqa: BLE001 — fault containment per cell
             self.stats.errors += 1
             # a failed measure may have consumed donated buffers mid-loop:
@@ -215,6 +245,32 @@ class BenchmarkRunner:
         if record and self.store is not None:
             self.store.append(rr)
         return rr
+
+    # ---- measured profiling ---------------------------------------------
+
+    def _profile_extra(self, cost_key: Any, phase_log, lower, *,
+                       kind: str = "step", wall_s: float = 0.0) -> Dict[str, Any]:
+        """The ``extra["prof_*"]`` payload for one profiled execution:
+        timeline from the measured ``phase_log`` plus op-class attribution
+        from the executable's (cached) HLO cost.  Attribution failures
+        degrade to a timeline-only profile with ``prof_error`` — profiling
+        must never turn a good measurement into an error record."""
+        tl = Timeline.from_phase_log(phase_log or [], kind=kind,
+                                     wall_s=wall_s,
+                                     memory=device_memory_stats())
+        extra = tl.to_extra()
+        try:
+            cost = self._prof_costs.get(cost_key)
+            if cost is None:
+                cost = cost_for_executable(lower)
+                if self.reuse:
+                    self._prof_costs[cost_key] = cost
+        except Exception as e:  # noqa: BLE001 — profile degrades, cell stays ok
+            from repro.core.hloanalysis import HloCost
+            cost = HloCost()
+            extra["prof_error"] = f"{type(e).__name__}: {e}"
+        extra.update(attribute(tl, cost).to_extra())
+        return extra
 
     # ---- serving path ----------------------------------------------------
 
@@ -240,13 +296,18 @@ class BenchmarkRunner:
 
     def _run_serve(self, scenario: Scenario, *,
                    hook: Optional[RegressionHook] = None,
-                   record: bool = True) -> RunResult:
+                   record: bool = True, profile: bool = False) -> RunResult:
         """One serving cell: regenerate the scenario's trace, replay it
         through the (cached) engine, and fold the latency distribution into
         a RunResult — ``median_us``/``mean_us``/``p10_us``/``p90_us`` are
         per-token decode latencies, and the TTFT/per-token p50/p95/p99 +
         throughput land under the well-known ``extra`` keys documented in
-        ``runner/results.py``."""
+        ``runner/results.py``.
+
+        ``profile=True`` records a per-decode-step phase timeline during
+        the measured replay and attributes it over the decode step's HLO
+        op classes; replay wall time outside decode steps (admission,
+        prefill, queue management) shows up as the profile's idle share."""
         from repro.launch.serve import summarize_metrics
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
@@ -276,10 +337,17 @@ class BenchmarkRunner:
                 tc = time.perf_counter()
                 engine.run(reqs)
                 compile_us = (time.perf_counter() - tc) * 1e6
-            out = engine.run(reqs, hook=hook)
+            phase_log: Optional[List[Tuple[float, float]]] = \
+                [] if profile else None
+            out = engine.run(reqs, hook=hook, phase_log=phase_log)
             extra = summarize_metrics(out)
             extra.update(trace=scenario.trace, slots=scenario.slots,
                          tokens=out["tokens_by_rid"])
+            if profile:
+                extra.update(self._profile_extra(
+                    ("serve-cost",) + key, phase_log,
+                    engine.lowered_decode, kind="decode_step",
+                    wall_s=out["wall_s"]))
             lats = out["tok_lat_s"] or out["ttft_s"]
             rr = RunResult(
                 name=scenario.name, bench=scenario.bench, arch=scenario.arch,
@@ -313,7 +381,8 @@ class BenchmarkRunner:
                    hooks: Optional[Dict[str, RegressionHook]] = None,
                    runs: Optional[int] = None,
                    warmup: Optional[int] = None,
-                   jobs: Optional[int] = None) -> List[RunResult]:
+                   jobs: Optional[int] = None,
+                   profile: Optional[bool] = None) -> List[RunResult]:
         """Run every scenario of the matrix; hooks are keyed by benchmark
         name ("arch/task") or full scenario name.
 
@@ -322,6 +391,9 @@ class BenchmarkRunner:
         by build_key so each worker keeps its caches hot (see
         ``repro.runner.pool``); results come back in matrix order with
         ``extra["shard"]`` set.  ``jobs<=1`` is the serial in-process path.
+        ``profile`` (default: the runner's setting) profiles every cell —
+        under sharded dispatch the flag rides in each worker job, so
+        profiled sweeps shard exactly like unprofiled ones.
         """
         scenarios = self.select(matrix)
         jobs = self.jobs if jobs is None else jobs
@@ -329,17 +401,20 @@ class BenchmarkRunner:
             # even a single selected cell goes through the pool: the caller
             # opted into worker fault containment and shard metadata
             return self._run_sharded(scenarios, hooks=hooks, runs=runs,
-                                     warmup=warmup, jobs=jobs)
+                                     warmup=warmup, jobs=jobs,
+                                     profile=profile)
         out = []
         for sc in scenarios:
             hook = (hooks or {}).get(sc.name) or (hooks or {}).get(sc.bench)
-            out.append(self.run(sc, hook=hook, runs=runs, warmup=warmup))
+            out.append(self.run(sc, hook=hook, runs=runs, warmup=warmup,
+                                profile=profile))
         return out
 
     def _run_sharded(self, scenarios: List[Scenario], *,
                      hooks: Optional[Dict[str, RegressionHook]],
                      runs: Optional[int], warmup: Optional[int],
-                     jobs: int) -> List[RunResult]:
+                     jobs: int,
+                     profile: Optional[bool] = None) -> List[RunResult]:
         """Dispatch a scenario batch to the persistent shard pool; the pool
         (and its workers' warm caches) lives until ``close()``."""
         if self._pool is not None and self._pool.jobs != jobs:
@@ -352,8 +427,10 @@ class BenchmarkRunner:
                                         reuse=self.reuse,
                                         measure_fence=self.measure_fence)
         record = self.store.append if self.store is not None else None
+        prof = self.profile if profile is None else profile
         results, run_stats = self._pool.run(scenarios, hooks=hooks,
                                             runs=runs, warmup=warmup,
+                                            profile=prof,
                                             on_result=record)
         self.stats.merge(run_stats)
         return results
@@ -364,7 +441,8 @@ class BenchmarkRunner:
                       hook: Optional[RegressionHook] = None,
                       runs: Optional[int] = None,
                       warmup: Optional[int] = None,
-                      record: bool = True, timeout: int = 1200) -> RunResult:
+                      record: bool = True, timeout: int = 1200,
+                      profile: bool = False) -> RunResult:
         """One scenario in its own interpreter: a crash (OOM, segfault in a
         kernel, ...) becomes an error record instead of killing the sweep.
 
@@ -384,6 +462,8 @@ class BenchmarkRunner:
                "--json", out]
         if not self.reuse:
             cmd.append("--no-reuse")
+        if profile:
+            cmd.append("--profile")
         if hook is not None:
             cmd += ["--slowdown-s", str(hook.slowdown_s),
                     "--leak-bytes", str(hook.leak_bytes)]

@@ -96,7 +96,8 @@ def _hook_from(slowdown_s: float, leak_bytes: int):
     return RegressionHook(slowdown_s=slowdown_s, leak_bytes=leak_bytes)
 
 
-def _run_cell(runner, scenario, hook, runs, warmup, lock_path):
+def _run_cell(runner, scenario, hook, runs, warmup, lock_path,
+              profile=False):
     """One cell, with the measurement fence when a lock path is given:
     warm pass unfenced (build/compile/threading overlap across workers),
     timed loop under the exclusive lock (contention-free measurement)."""
@@ -105,13 +106,17 @@ def _run_cell(runner, scenario, hook, runs, warmup, lock_path):
     # other workers), and the fenced re-run replays it on the warm engine
     if not (lock_path and runner.reuse):
         return runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
-                          record=False)
-    warm = runner.run(scenario, runs=1, warmup=0, record=False)
+                          record=False, profile=profile)
+    # a profiled warm pass pays the attribution AOT compile here, unfenced
+    # (it caches per executable), so the fenced profiled re-measure below
+    # never holds the lock through an XLA compile
+    warm = runner.run(scenario, runs=1, warmup=0, record=False,
+                      profile=profile)
     if warm.status != "ok":
         return warm
     with _file_lock(lock_path):
         rr = runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
-                        record=False)
+                        record=False, profile=profile)
     if rr.status == "ok":
         # the fenced re-measure hit the warm pass's cache: report the
         # cell's true build/compile provenance instead
@@ -145,7 +150,8 @@ def _serve_pool(args) -> int:
         hook = _hook_from(hook_params.get("slowdown_s", 0.0),
                           hook_params.get("leak_bytes", 0))
         rr = _run_cell(runner, scenario, hook, msg.get("runs"),
-                       msg.get("warmup"), args.measure_lock)
+                       msg.get("warmup"), args.measure_lock,
+                       profile=bool(msg.get("profile") or args.profile))
         # cumulative stats ride along with every result: one round trip
         # per cell, and no window where a completed cell's builds/compiles
         # can be lost to a dying worker
@@ -169,6 +175,9 @@ def main(argv=None) -> int:
                     help="extra warmup after a fresh compile (parent's setting)")
     ap.add_argument("--no-reuse", dest="reuse", action="store_false",
                     default=True, help="disable build/executable caching")
+    ap.add_argument("--profile", action="store_true",
+                    help="measured profiling: record extra['prof_*'] "
+                         "(timeline + op-class attribution) per cell")
     ap.add_argument("--measure-lock", default="",
                     help="flock path fencing the timed loop (serve mode)")
     ap.add_argument("--slowdown-s", type=float, default=0.0)
@@ -186,7 +195,7 @@ def main(argv=None) -> int:
     scenario = Scenario.from_dict(json.loads(args.scenario))
     runner = _build_runner(args)
     rr = runner.run(scenario, hook=_hook_from(args.slowdown_s, args.leak_bytes),
-                    record=False)
+                    record=False, profile=args.profile)
     with open(args.json, "w") as f:
         json.dump({"result": rr.to_dict(), "stats": runner.stats.to_dict()}, f)
     return 0
