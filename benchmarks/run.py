@@ -3,7 +3,7 @@ executed through the unified ``repro.runner.BenchmarkRunner``.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
         [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N]
-        [--profile] [--list]
+        [--cluster local:N|HOST:PORT] [--profile] [--list]
 
 ``--list`` prints the scenario names each matrix-driven table would run
 (after filter/exclude/skip selection) and exits without executing —
@@ -20,7 +20,10 @@ JSONL run log with a latest-pointer for ``scripts/report_tables.py``.
 the torchbench driver's model-selection semantics.  ``--isolate`` runs
 each scenario in its own subprocess (fault containment for crashy cells);
 ``--jobs N`` shards every ``run_matrix`` sweep across N persistent worker
-subprocesses (see ``repro/runner/pool.py``).
+subprocesses (see ``repro/runner/pool.py``); ``--cluster local:N`` (or
+``--cluster HOST:PORT`` with workers launched elsewhere via ``python -m
+repro.runner.worker --connect HOST:PORT``) dispatches every sweep across
+socket-connected cluster workers instead (see ``repro/runner/cluster/``).
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 """
@@ -47,6 +50,11 @@ def main(argv=None) -> int:
                     help="one subprocess per scenario (fault containment)")
     ap.add_argument("--jobs", type=int, default=0,
                     help="shard matrix sweeps across N worker subprocesses")
+    ap.add_argument("--cluster", default="",
+                    help="dispatch matrix sweeps across cluster workers: "
+                         "'local:N' spawns N localhost workers, 'HOST:PORT' "
+                         "binds the coordinator there for external "
+                         "worker --connect processes")
     ap.add_argument("--profile", action="store_true",
                     help="measured profiling on every matrix cell: phase "
                          "timelines + op-class attribution under "
@@ -61,7 +69,7 @@ def main(argv=None) -> int:
                             table45_ci)
     from benchmarks.common import make_runner
     runner = make_runner(isolate=args.isolate, jobs=args.jobs,
-                         profile=args.profile)
+                         cluster=args.cluster, profile=args.profile)
     runner.default_filter = tuple(args.filter)
     runner.default_exclude = tuple(args.exclude)
     runner.dryrun_refresh = args.refresh

@@ -41,6 +41,17 @@ acceptance bound is <10% — the phase split is two extra perf_counter
 reads per step, and the attribution compile happens outside the timed
 loop), so overhead regressions show up in the perf trajectory.
 
+Part 5 — scheduling strategies on a skew-weighted matrix: four
+equal-*guessed*-weight build-key groups where an injected slowdown makes
+the first-ranked group far heavier than the task-weight table believes.
+Static LPT (placed up front by the wrong guess) stacks a second group
+behind the slow one; dynamic stealing lets the free worker drain the
+tail; cluster ``local:2`` runs the same dynamic schedule over the socket
+transport (its delta over stealing is coordinator + worker-startup
+overhead).  The ``steal_win`` row is static/stealing wall — > 1.0
+whenever guessed and actual cost diverge, which is the load-balance case
+the deque exists for.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -50,7 +61,7 @@ import multiprocessing
 import time
 
 from benchmarks.common import emit, results_path
-from repro.core.harness import measure
+from repro.core.harness import RegressionHook, measure
 from repro.core.suite import get_benchmark
 from repro.runner import BenchmarkRunner, Scenario, ScenarioMatrix
 
@@ -135,7 +146,50 @@ def _serve_matrix(fast: bool) -> ScenarioMatrix:
 
 def scenario_matrices(fast: bool = False):
     """The matrices this benchmark executes (``benchmarks.run --list`` hook)."""
-    return [_sweep_matrix(fast), _serve_matrix(fast)]
+    return [_sweep_matrix(fast), _serve_matrix(fast), _skew_matrix(fast)]
+
+
+# ---- part 5: static LPT vs stealing vs cluster ----------------------------
+
+def _skew_matrix(fast: bool) -> ScenarioMatrix:
+    """Four build-key groups of ONE arch (dtypes x reduced-config modes,
+    one train cell each, roughly equal real cost) with EQUAL guessed
+    weights — only the hook below skews the actual cost, so the
+    static-vs-stealing gap isolates the scheduling decision.  (Mixing
+    archs here buries the effect: their real cost spread dwarfs the
+    injected skew.)"""
+    return ScenarioMatrix(archs=[ARCH], tasks=("train",),
+                          batches=(1,), seqs=(8 if fast else 16,),
+                          dtypes=("fp32", "bf16"),
+                          modes=("jit_donated", "jit_noremat"))
+
+
+def _skew_hooks(matrix: ScenarioMatrix, slow_s: float) -> dict:
+    """Slow the FIRST-ranked group's cell: on equal weights the ranking is
+    first-appearance order, so static LPT seeds it on shard 0 and then —
+    trusting the wrong guess — stacks the third group behind it, while a
+    stealing worker that drew a fast group drains the tail instead."""
+    first = matrix.expand()[0]
+    return {first.name: RegressionHook(slowdown_s=slow_s)}
+
+
+def sched_path(matrix: ScenarioMatrix, hooks: dict, *, jobs: int = 0,
+               steal: bool = True, cluster: str = "") -> float:
+    """Wall time of one dispatch strategy; runs=1/warmup=0/compile_warmup=0
+    so the injected slowdown fires exactly once per measured cell."""
+    runner = BenchmarkRunner(runs=1, warmup=0, compile_warmup=0, jobs=jobs,
+                             steal=steal, cluster=cluster,
+                             measure_fence=False)
+    t0 = time.perf_counter()
+    try:
+        results = runner.run_matrix(matrix, hooks=hooks)
+    finally:
+        runner.close()
+    wall = time.perf_counter() - t0
+    bad = [rr for rr in results if rr.status != "ok"]
+    if bad:
+        raise RuntimeError(f"{bad[0].name}: {bad[0].error}")
+    return wall
 
 
 def dispatch_path(matrix: ScenarioMatrix, runs: int, *, jobs: int = 0,
@@ -221,6 +275,29 @@ def main(fast: bool = False, runner=None) -> None:
     emit("runner_bench/profile_overhead", 0.0,
          f"{overhead:.3f}x;profiled={prof_rr.median_us:.0f}us;"
          f"base={base_rr.median_us:.0f}us")
+    del prof_runner
+    gc.collect()
+
+    # scheduling strategies: static LPT vs dynamic stealing vs cluster
+    # local:2 on the skew-weighted matrix (see module docstring, part 5)
+    # the slowdown must make the hooked group cost ~2x a normal group
+    # (build + jit ~8-10s here): that is the regime where static LPT
+    # stacks a second group behind the slow one and stealing does not
+    skew_matrix = _skew_matrix(fast)
+    slow_s = 18.0 if fast else 22.0
+    hooks = _skew_hooks(skew_matrix, slow_s)
+    static_s = sched_path(skew_matrix, hooks, jobs=JOBS, steal=False)
+    steal_s = sched_path(skew_matrix, hooks, jobs=JOBS, steal=True)
+    cluster_s = sched_path(skew_matrix, hooks, cluster=f"local:{JOBS}")
+    steal_win = static_s / steal_s if steal_s else 0.0
+    cluster_ratio = cluster_s / steal_s if steal_s else 0.0
+    emit("runner_bench/sched_static_lpt_s", static_s * 1e6,
+         f"jobs={JOBS};{len(skew_matrix)}_cells;slow_cell={slow_s:.0f}s")
+    emit("runner_bench/sched_stealing_s", steal_s * 1e6, f"jobs={JOBS}")
+    emit("runner_bench/sched_cluster_s", cluster_s * 1e6,
+         f"local:{JOBS};socket_transport")
+    emit("runner_bench/steal_win_vs_static", 0.0,
+         f"{steal_win:.2f}x;cluster_vs_steal={cluster_ratio:.2f}x")
 
     with open(results_path("runner_bench.json"), "w") as f:
         json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
@@ -238,7 +315,14 @@ def main(fast: bool = False, runner=None) -> None:
                    "profile": {"cell": sc.name,
                                "base_median_us": base_rr.median_us,
                                "profiled_median_us": prof_rr.median_us,
-                               "overhead_ratio": overhead}},
+                               "overhead_ratio": overhead},
+                   "scheduling": {"cells": [s.name for s in skew_matrix],
+                                  "jobs": JOBS, "slow_cell_s": slow_s,
+                                  "static_lpt_s": static_s,
+                                  "stealing_s": steal_s,
+                                  "cluster_local_s": cluster_s,
+                                  "steal_win_vs_static": steal_win,
+                                  "cluster_ratio_vs_steal": cluster_ratio}},
                   f, indent=1)
 
 

@@ -76,4 +76,38 @@ assert runner.stats.model_builds == 2, runner.stats.to_dict()
 print("sharded smoke OK")
 EOF
 
+echo "== cluster dispatch: local:2 socket workers match serial, no orphans =="
+python - <<'EOF'
+import os
+
+from repro.runner import BenchmarkRunner, ScenarioMatrix
+
+matrix = ScenarioMatrix(archs=["gemma-2b"], tasks=("train",),
+                        batches=(1,), seqs=(8,), dtypes=("fp32", "bf16"))
+serial = BenchmarkRunner(runs=1, warmup=0)
+serial_names = [rr.name for rr in serial.run_matrix(matrix)]
+
+runner = BenchmarkRunner(runs=1, warmup=0)
+try:
+    results = runner.run_matrix(matrix, cluster="local:2")
+    pids = runner.cluster_worker_pids()
+finally:
+    runner.close()
+for rr in results:
+    print(f"  {rr.name}: {rr.status} (host {rr.extra.get('host')})")
+    assert rr.status == "ok", rr.error
+    assert rr.extra.get("host", "").startswith("local"), rr.extra
+assert [rr.name for rr in results] == serial_names
+assert runner.stats.model_builds >= 1, runner.stats.to_dict()
+# coordinator shutdown must leave no orphan worker processes
+assert len(pids) == 2
+for pid in pids:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        continue
+    raise AssertionError(f"orphan cluster worker pid {pid}")
+print("cluster smoke OK")
+EOF
+
 echo "smoke OK"

@@ -28,8 +28,11 @@ Layering (ISSUE 3):
 Naming note: "serve" appears twice in this codebase with unrelated
 meanings.  THIS module is the inference-serving *workload*.  The
 ``--serve`` flag of ``repro.runner.worker`` puts a benchmark worker into
-its persistent JSONL pool protocol (any task, including this one, can be
-dispatched through it).  Grep accordingly.
+its persistent JSONL pool protocol over stdin/stdout pipes, and the
+worker's ``--connect HOST:PORT`` flag speaks the same protocol over TCP
+to a cluster coordinator (``repro.runner.cluster``) — both are dispatch
+transports that can be handed scenarios of any task, including this
+one's ``task="serve"`` cells.  Grep accordingly.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
         --requests 16 --slots 4 --prompt-len 32 --trace bursty

@@ -1,0 +1,16 @@
+"""Multi-host cluster dispatch for the unified benchmark runner.
+
+The socket transport of the worker protocol (``repro.runner.protocol``):
+a ``Coordinator`` listens on TCP, ``worker --connect`` processes register
+with a host id + capacity and steal build-key groups from a central
+deque, with heartbeat-based failure detection and group reassignment.
+``ClusterScheduler`` wraps it in the ``ShardScheduler`` interface and
+owns the ``"local:N"`` self-contained deployment (N localhost worker
+subprocesses), which is how ``run_matrix(..., cluster="local:N")``,
+``benchmarks.run --cluster`` and the tests exercise the subsystem on one
+machine.
+"""
+from repro.runner.cluster.coordinator import Coordinator
+from repro.runner.cluster.scheduler import ClusterScheduler, parse_cluster_spec
+
+__all__ = ["Coordinator", "ClusterScheduler", "parse_cluster_spec"]

@@ -1,23 +1,37 @@
 """Sharded process-pool dispatch for ``BenchmarkRunner.run_matrix``.
 
-``assign_shards`` partitions a selected scenario list into ``jobs`` shards
-keyed on ``Scenario.build_key()``: every scenario of one (arch, dtype,
-mode-overrides) lands on the same worker, so the per-worker arch-build and
-compiled-executable caches keep paying off exactly as they do in-process.
-Build-key groups are placed largest-first onto the least-loaded shard
-(LPT greedy), which is fully deterministic for a given scenario list.
+Scenarios are scheduled as **build-key groups** (``rank_groups``): every
+scenario of one (arch, dtype, mode-overrides) is dispatched to the same
+worker back-to-back, so the per-worker arch-build and compiled-executable
+caches keep paying off exactly as they do in-process.
+
+Two placement strategies share those groups:
+
+* **dynamic stealing** (default): the first ``jobs`` ranked groups seed
+  one worker each (deterministic start — the common two-group/two-worker
+  smoke stays exactly placed), and the remaining groups sit in a shared
+  deque that idle workers *pull* from as they finish.  A worker stuck on
+  a slow group simply stops pulling; the others drain the tail.  This
+  replaces the static tail assignment, whose task-weight guesses misplace
+  groups whenever guessed and actual cost diverge.
+* **static LPT** (``steal=False``, and the ``assign_shards`` function):
+  groups are placed largest-guessed-weight-first onto the least-loaded
+  shard up front.  Fully deterministic placement, kept for comparison —
+  ``benchmarks/runner_bench.py`` measures static vs stealing vs cluster
+  on a skew-weighted matrix.
 
 ``ShardScheduler`` owns N *persistent* worker subprocesses
 (``python -m repro.runner.worker --serve``) that live across ``run()``
 calls — a regression-CI day's repeated nights keep their warm caches.
-Each worker receives its shard one JSONL request at a time over stdin and
-streams one JSONL result back per cell, so the parent collects results as
-they complete and a crash (OOM, kernel segfault, ...) costs exactly the
-in-flight cell: the dead worker is respawned and the shard's remaining
-cells continue.  Worker ``RunnerStats`` are fetched after every cell and
-delta-merged into the per-run stats, so model builds / compiles that
-happen out-of-process stay visible to the parent (only the stats of a cell
-that crashes its worker are lost with the process).
+Jobs and results are JSONL messages (``repro.runner.protocol`` — the same
+protocol the cluster speaks over TCP) over each worker's stdin/stdout
+pipes, so the parent collects results as cells complete and a crash (OOM,
+kernel segfault, ...) costs exactly the in-flight cell: the dead worker is
+respawned and its group's remaining cells continue.  Worker ``RunnerStats``
+are fetched after every cell and delta-merged into the per-run stats, so
+model builds / compiles that happen out-of-process stay visible to the
+parent (only the stats of a cell that crashes its worker are lost with the
+process).
 
 Concurrent workers overlap their expensive phases (interpreter startup,
 model build, trace, XLA compile) but serialize the short timed loops on a
@@ -34,16 +48,16 @@ with parent-process behaviour cannot cross the process boundary.
 """
 from __future__ import annotations
 
-import json
+import collections
 import os
-import select
 import subprocess
 import sys
 import tempfile
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.runner.protocol import Channel, job_message, stats_delta
 from repro.runner.results import RunResult
 from repro.runner.scenario import Scenario
 
@@ -72,16 +86,13 @@ _TASK_WEIGHT = {"train": 4, "infer_prefill": 2, "infer_decode": 1,
                 "serve": 8}
 
 
-def assign_shards(scenarios: Sequence[Scenario], jobs: int) -> List[List[int]]:
-    """Partition scenario *indices* into ``jobs`` shards by build_key.
-
-    Deterministic: scenarios of one build_key stay together (in input
-    order), groups are placed heaviest-first — group weight is the sum of
-    per-task cost weights, ties broken by first appearance — onto the
-    currently lightest shard (ties by shard index).  Shards may come back
-    empty when there are fewer groups than jobs.
-    """
-    jobs = max(1, int(jobs))
+def rank_groups(scenarios: Sequence[Scenario]) -> List[Tuple[List[int], int]]:
+    """Build-key groups of scenario *indices*, ranked heaviest-guessed-
+    weight first (group weight = sum of per-task cost weights, ties broken
+    by first appearance — sorted() is stable).  Scenarios of one build_key
+    stay together in input order.  This is the shared scheduling unit for
+    the single-host pool AND the cluster coordinator: a group is the chunk
+    a worker owns so its caches stay hot."""
     groups: Dict[Tuple, List[int]] = {}
     weight: Dict[Tuple, int] = {}
     order: List[Tuple] = []
@@ -93,15 +104,35 @@ def assign_shards(scenarios: Sequence[Scenario], jobs: int) -> List[List[int]]:
             order.append(key)
         groups[key].append(i)
         weight[key] += _TASK_WEIGHT.get(sc.task, 2)
+    ranked = sorted(order, key=lambda k: -weight[k])
+    return [(groups[k], weight[k]) for k in ranked]
+
+
+def assign_shards(scenarios: Sequence[Scenario], jobs: int) -> List[List[int]]:
+    """Static LPT: partition scenario indices into ``jobs`` shards by
+    build_key, placing ranked groups onto the currently lightest shard
+    (ties by shard index).  Fully deterministic for a given scenario list;
+    shards may come back empty when there are fewer groups than jobs."""
+    jobs = max(1, int(jobs))
     shards: List[List[int]] = [[] for _ in range(jobs)]
     load = [0] * jobs
-    # sorted() is stable, so equal-weight groups keep first-appearance order
-    ranked = sorted(order, key=lambda k: -weight[k])
-    for key in ranked:
+    for idxs, w in rank_groups(scenarios):
         target = min(range(jobs), key=lambda j: (load[j], j))
-        shards[target].extend(groups[key])
-        load[target] += weight[key]
+        shards[target].extend(idxs)
+        load[target] += w
     return shards
+
+
+def steal_plan(ranked: Sequence[Tuple[List[int], int]], jobs: int
+               ) -> Tuple[List[List[int]], Deque[List[int]]]:
+    """Dynamic placement: the first ``jobs`` ranked groups seed one worker
+    each (deterministic start), the tail goes into the shared steal deque
+    idle workers pull from.  Returns ``(seeds, deque)``."""
+    jobs = max(1, int(jobs))
+    seeds: List[List[int]] = [[] for _ in range(jobs)]
+    for j, (idxs, _) in enumerate(ranked[:jobs]):
+        seeds[j] = list(idxs)
+    return seeds, collections.deque(list(idxs) for idxs, _ in ranked[jobs:])
 
 
 class _Worker:
@@ -112,6 +143,7 @@ class _Worker:
         self.argv = argv
         self.env = env
         self.proc: Optional[subprocess.Popen] = None
+        self.chan: Optional[Channel] = None
         self.generation = 0          # bumped per spawn (stats-delta resets)
         # cumulative worker stats already delta-merged by the parent; lives
         # on the worker (NOT per run() call) because the process — and its
@@ -119,7 +151,6 @@ class _Worker:
         self.stats_seen: Dict[str, int] = {}
         self.stats_gen = -1
         self.stderr_path = ""
-        self._buf = b""
 
     def ensure(self) -> subprocess.Popen:
         if self.proc is None or self.proc.poll() is not None:
@@ -130,34 +161,19 @@ class _Worker:
                 self.argv, env=self.env, stdin=subprocess.PIPE,
                 stdout=subprocess.PIPE, stderr=fd, bufsize=0)
             os.close(fd)
-            self._buf = b""
+            self.chan = Channel.over_pipes(self.proc.stdout, self.proc.stdin)
             self.generation += 1
         return self.proc
 
     def send(self, msg: dict) -> None:
-        proc = self.ensure()
-        proc.stdin.write((json.dumps(msg) + "\n").encode())
-        proc.stdin.flush()
+        self.ensure()
+        self.chan.send(msg)
 
     def recv(self, timeout: float) -> Optional[dict]:
         """One protocol line, or None on EOF/timeout (worker dead/hung)."""
-        proc = self.proc
-        if proc is None or proc.stdout is None:
+        if self.chan is None:
             return None
-        deadline = time.monotonic() + timeout
-        while b"\n" not in self._buf:
-            left = deadline - time.monotonic()
-            if left <= 0:
-                return None
-            ready, _, _ = select.select([proc.stdout], [], [], min(left, 1.0))
-            if not ready:
-                continue
-            chunk = os.read(proc.stdout.fileno(), 1 << 16)
-            if not chunk:
-                return None
-            self._buf += chunk
-        line, self._buf = self._buf.split(b"\n", 1)
-        return json.loads(line)
+        return self.chan.recv(timeout)
 
     def stderr_tail(self, n: int = 500) -> str:
         try:
@@ -179,6 +195,7 @@ class _Worker:
 
     def kill(self, grace: float = 0.0) -> None:
         proc, self.proc = self.proc, None
+        self.chan = None
         if proc is not None:
             try:
                 if proc.stdin:
@@ -198,7 +215,6 @@ class _Worker:
             if proc.stdout:
                 proc.stdout.close()
         self._cleanup_stderr()
-        self._buf = b""
 
     def _cleanup_stderr(self) -> None:
         if self.stderr_path and os.path.exists(self.stderr_path):
@@ -214,7 +230,8 @@ class ShardScheduler:
 
     def __init__(self, jobs: int, *, runs: int = 5, warmup: int = 1,
                  compile_warmup: int = 3, reuse: bool = True,
-                 measure_fence: bool = True, timeout: float = 1200.0):
+                 measure_fence: bool = True, timeout: float = 1200.0,
+                 steal: bool = True):
         if os.name != "posix":
             # the protocol needs select()able pipes + flock; fail loudly
             # instead of turning every cell into a "worker died" record
@@ -222,6 +239,7 @@ class ShardScheduler:
                                "host; use the serial path (jobs=0)")
         self.jobs = max(1, int(jobs))
         self.timeout = timeout
+        self.steal = steal
         argv = [sys.executable, "-m", "repro.runner.worker", "--serve",
                 "--runs", str(runs), "--warmup", str(warmup),
                 "--compile-warmup", str(compile_warmup)]
@@ -270,28 +288,38 @@ class ShardScheduler:
             hooks: Optional[dict] = None,
             runs: Optional[int] = None, warmup: Optional[int] = None,
             profile: bool = False,
-            on_result: Optional[Callable[[RunResult], None]] = None):
-        """Run every scenario, sharded by build_key; returns
+            on_result: Optional[Callable[[RunResult], None]] = None,
+            steal: Optional[bool] = None):
+        """Run every scenario, grouped by build_key; returns
         ``(results_in_input_order, run_stats)`` where ``run_stats`` is a
         ``RunnerStats`` of everything the workers did *during this call*.
 
-        ``profile`` rides in every job message, so workers record the
-        measured ``extra["prof_*"]`` payload exactly like the serial path.
+        ``steal`` (default: the scheduler's setting) picks dynamic
+        group stealing vs static LPT placement.  ``profile`` rides in
+        every job message, so workers record the measured
+        ``extra["prof_*"]`` payload exactly like the serial path.
         ``on_result`` fires from worker-reader threads as cells complete
         (the ResultStore append path is thread-safe for exactly this).
         """
         from repro.runner.runner import RunnerStats
-        shards = assign_shards(scenarios, self.jobs)
+        steal = self.steal if steal is None else steal
+        ranked = rank_groups(scenarios)
+        if steal:
+            seeds, queue = steal_plan(ranked, self.jobs)
+        else:
+            # static LPT: every group pre-placed, nothing left to steal
+            shards = assign_shards(scenarios, self.jobs)
+            seeds, queue = [list(s) for s in shards], collections.deque()
         results: List[Optional[RunResult]] = [None] * len(scenarios)
         run_stats = RunnerStats()
         threads = []
-        for worker, idxs in zip(self._workers, shards):
-            if not idxs:
+        for worker, seed in zip(self._workers, seeds):
+            if not seed and not queue:
                 continue
             t = threading.Thread(
                 target=self._drive,
-                args=(worker, idxs, scenarios, hooks or {}, runs, warmup,
-                      profile, results, run_stats, on_result),
+                args=(worker, seed, queue, scenarios, hooks or {}, runs,
+                      warmup, profile, results, run_stats, on_result),
                 name=f"shard-{worker.idx}", daemon=True)
             threads.append(t)
             t.start()
@@ -299,58 +327,70 @@ class ShardScheduler:
             t.join()
         return [r for r in results if r is not None], run_stats
 
-    def _drive(self, worker: _Worker, idxs: List[int],
-               scenarios: Sequence[Scenario], hooks: dict,
-               runs: Optional[int], warmup: Optional[int], profile: bool,
-               results: List[Optional[RunResult]], run_stats,
+    def _drive(self, worker: _Worker, seed: List[int],
+               queue: Deque[List[int]], scenarios: Sequence[Scenario],
+               hooks: dict, runs: Optional[int], warmup: Optional[int],
+               profile: bool, results: List[Optional[RunResult]], run_stats,
                on_result: Optional[Callable[[RunResult], None]]) -> None:
-        """One worker's shard, sequentially; crashes cost one cell each."""
-        for idx in idxs:
-            sc = scenarios[idx]
-            t0 = time.perf_counter()
-            try:
-                worker.ensure()
-                if worker.generation != worker.stats_gen:
-                    worker.stats_gen = worker.generation
-                    worker.stats_seen = {}   # fresh interpreter: from zero
-                hook = hooks.get(sc.name) or hooks.get(sc.bench)
-                job = {"op": "run", "scenario": sc.to_dict(),
-                       "runs": runs, "warmup": warmup,
-                       "profile": profile}
-                if hook is not None:
-                    job["hook"] = {
-                        "slowdown_s": getattr(hook, "slowdown_s", 0.0),
-                        "leak_bytes": getattr(hook, "leak_bytes", 0)}
-                rr, stats = self._round_trip(worker, job)
-            except Exception as e:  # noqa: BLE001 — e.g. spawn ENOMEM: the
-                rr, stats = None, None   # shard must keep emitting records
-                reason = f"shard worker {worker.idx} dispatch failed: {e!r}"
-            else:
-                reason = None if rr is not None else \
-                    worker.death_reason(self.timeout)
-            if rr is None:
-                worker.kill()
-                rr = RunResult.from_error(sc, reason,
-                                          wall_s=time.perf_counter() - t0)
+        """One worker's job stream: its seed group first, then whatever
+        groups it can steal from the shared deque.  Crashes cost one cell
+        each (the worker is respawned for its group's remaining cells)."""
+        group = seed
+        while True:
+            if not group:
                 with self._lock:
-                    run_stats.scenarios_run += 1
-                    run_stats.errors += 1
-            else:
-                rr.wall_s = time.perf_counter() - t0   # incl. dispatch
-                if stats:
-                    delta = {k: max(0, v - worker.stats_seen.get(k, 0))
-                             for k, v in stats.items()}
-                    worker.stats_seen = stats
-                    with self._lock:
-                        run_stats.merge(delta)
-            rr.extra["shard"] = worker.idx
-            rr.extra["isolated"] = True
-            results[idx] = rr
-            try:
-                if on_result is not None:
-                    on_result(rr)
-            except Exception:  # noqa: BLE001 — a failing store append must
-                pass           # not kill the shard; the result is returned
+                    if not queue:
+                        return
+                    group = queue.popleft()   # steal the next ranked group
+                continue
+            for idx in group:
+                self._run_one(worker, idx, scenarios, hooks, runs, warmup,
+                              profile, results, run_stats, on_result)
+            group = []
+
+    def _run_one(self, worker: _Worker, idx: int,
+                 scenarios: Sequence[Scenario], hooks: dict,
+                 runs: Optional[int], warmup: Optional[int], profile: bool,
+                 results: List[Optional[RunResult]], run_stats,
+                 on_result: Optional[Callable[[RunResult], None]]) -> None:
+        sc = scenarios[idx]
+        t0 = time.perf_counter()
+        try:
+            worker.ensure()
+            if worker.generation != worker.stats_gen:
+                worker.stats_gen = worker.generation
+                worker.stats_seen = {}   # fresh interpreter: from zero
+            hook = hooks.get(sc.name) or hooks.get(sc.bench)
+            job = job_message(sc, runs=runs, warmup=warmup,
+                              profile=profile, hook=hook)
+            rr, stats = self._round_trip(worker, job)
+        except Exception as e:  # noqa: BLE001 — e.g. spawn ENOMEM: the
+            rr, stats = None, None   # shard must keep emitting records
+            reason = f"shard worker {worker.idx} dispatch failed: {e!r}"
+        else:
+            reason = None if rr is not None else \
+                worker.death_reason(self.timeout)
+        if rr is None:
+            worker.kill()
+            rr = RunResult.from_error(sc, reason,
+                                      wall_s=time.perf_counter() - t0)
+            with self._lock:
+                run_stats.scenarios_run += 1
+                run_stats.errors += 1
+        else:
+            rr.wall_s = time.perf_counter() - t0   # incl. dispatch
+            delta = stats_delta(stats, worker.stats_seen)
+            if delta:
+                with self._lock:
+                    run_stats.merge(delta)
+        rr.extra["shard"] = worker.idx
+        rr.extra["isolated"] = True
+        results[idx] = rr
+        try:
+            if on_result is not None:
+                on_result(rr)
+        except Exception:  # noqa: BLE001 — a failing store append must
+            pass           # not kill the shard; the result is returned
 
     def _round_trip(self, worker: _Worker, job: dict):
         """Send one job, read its result (which carries the worker's

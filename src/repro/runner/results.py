@@ -20,9 +20,23 @@ Well-known ``extra`` keys written by the runner (still schema v1 — readers
 must tolerate their absence):
 
     extra["isolated"]      bool   measured in a worker subprocess
-                                  (``isolate=True`` or sharded dispatch)
+                                  (``isolate=True``, sharded, or cluster
+                                  dispatch)
     extra["shard"]         int    worker index that ran this scenario under
                                   sharded dispatch (``run_matrix(jobs=N)``)
+    extra["host"]          str    registered host id of the cluster worker
+                                  that ran this scenario under cluster
+                                  dispatch (``run_matrix(cluster=...)``,
+                                  see ``repro.runner.cluster``): the
+                                  worker's ``--host`` flag, ``localK`` for
+                                  ``cluster="local:N"`` workers, or
+                                  ``<hostname>-<pid>`` by default.  Also
+                                  set on the error record of a cell that
+                                  was in flight on a worker that died.
+                                  Cluster workers' build/compile counters
+                                  are delta-merged into the parent
+                                  ``RunnerStats`` exactly like pool
+                                  workers' (no per-record snapshot).
     extra["worker_stats"]  dict   the isolated worker's ``RunnerStats``
                                   snapshot (model builds / compiles that
                                   happened out-of-process)

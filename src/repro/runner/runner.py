@@ -80,7 +80,8 @@ class BenchmarkRunner:
     def __init__(self, store: Optional[ResultStore] = None, *,
                  runs: int = 5, warmup: int = 1, compile_warmup: int = 3,
                  reuse: bool = True, isolate: bool = False, jobs: int = 0,
-                 measure_fence: bool = True, profile: bool = False):
+                 measure_fence: bool = True, profile: bool = False,
+                 cluster: str = "", steal: bool = True):
         self.store = store
         self.runs = runs
         self.warmup = warmup
@@ -97,6 +98,14 @@ class BenchmarkRunner:
         # wants); throughput-only sweeps may turn it off
         self.jobs = jobs
         self.measure_fence = measure_fence
+        # default cluster spec for run_matrix (CLI --cluster): "local:N"
+        # spawns N localhost socket workers, "HOST:PORT" binds the
+        # coordinator there for externally-launched workers (see
+        # repro.runner.cluster); "" means no cluster dispatch.  steal
+        # picks dynamic group stealing vs static LPT for the single-host
+        # pool (the cluster is always dynamic)
+        self.cluster = cluster
+        self.steal = steal
         # measured profiling (src/repro/profiler/): per-step phase
         # timelines + op-class attribution under extra["prof_*"]; per-call
         # override via run(..., profile=...)
@@ -120,12 +129,23 @@ class BenchmarkRunner:
         # profiled re-measure
         self._prof_costs: Dict[Any, Any] = {}
         self._pool: Optional[ShardScheduler] = None
+        self._cluster: Optional[Any] = None   # ClusterScheduler, lazy
 
     def close(self) -> None:
-        """Shut down the persistent shard workers (no-op when serial)."""
+        """Shut down the persistent shard workers and the cluster
+        coordinator + its local workers (no-op when serial)."""
         if self._pool is not None:
             self._pool.close()
             self._pool = None
+        if self._cluster is not None:
+            self._cluster.close()
+            self._cluster = None
+
+    def cluster_worker_pids(self) -> List[int]:
+        """PIDs of the locally-spawned cluster workers (``cluster=
+        "local:N"``), empty when no cluster is active or it binds for
+        external workers — the smoke gate's no-orphans check."""
+        return [] if self._cluster is None else self._cluster.worker_pids()
 
     def __del__(self):
         try:
@@ -382,6 +402,7 @@ class BenchmarkRunner:
                    runs: Optional[int] = None,
                    warmup: Optional[int] = None,
                    jobs: Optional[int] = None,
+                   cluster: Optional[str] = None,
                    profile: Optional[bool] = None) -> List[RunResult]:
         """Run every scenario of the matrix; hooks are keyed by benchmark
         name ("arch/task") or full scenario name.
@@ -391,12 +412,23 @@ class BenchmarkRunner:
         by build_key so each worker keeps its caches hot (see
         ``repro.runner.pool``); results come back in matrix order with
         ``extra["shard"]`` set.  ``jobs<=1`` is the serial in-process path.
-        ``profile`` (default: the runner's setting) profiles every cell —
-        under sharded dispatch the flag rides in each worker job, so
-        profiled sweeps shard exactly like unprofiled ones.
+        ``cluster`` (default: the runner's setting; overrides ``jobs``)
+        dispatches across socket-connected workers instead —
+        ``"local:N"`` spins up N localhost worker subprocesses,
+        ``"HOST:PORT"`` binds a coordinator for workers launched elsewhere
+        with ``worker --connect`` (see ``repro.runner.cluster``); results
+        carry ``extra["host"]``.  ``profile`` (default: the runner's
+        setting) profiles every cell — under sharded/cluster dispatch the
+        flag rides in each worker job, so profiled sweeps dispatch exactly
+        like unprofiled ones.
         """
         scenarios = self.select(matrix)
         jobs = self.jobs if jobs is None else jobs
+        cluster = self.cluster if cluster is None else cluster
+        if cluster and scenarios:
+            return self._run_clustered(scenarios, hooks=hooks, runs=runs,
+                                       warmup=warmup, cluster=cluster,
+                                       profile=profile)
         if jobs and jobs > 1 and scenarios:
             # even a single selected cell goes through the pool: the caller
             # opted into worker fault containment and shard metadata
@@ -431,7 +463,35 @@ class BenchmarkRunner:
         results, run_stats = self._pool.run(scenarios, hooks=hooks,
                                             runs=runs, warmup=warmup,
                                             profile=prof,
-                                            on_result=record)
+                                            on_result=record,
+                                            steal=self.steal)
+        self.stats.merge(run_stats)
+        return results
+
+    def _run_clustered(self, scenarios: List[Scenario], *,
+                       hooks: Optional[Dict[str, RegressionHook]],
+                       runs: Optional[int], warmup: Optional[int],
+                       cluster: str,
+                       profile: Optional[bool] = None) -> List[RunResult]:
+        """Dispatch a scenario batch to the cluster coordinator; the
+        coordinator — its worker connections, and for ``local:N`` the
+        spawned worker subprocesses with their warm caches — lives until
+        ``close()``, like the single-host pool."""
+        from repro.runner.cluster import ClusterScheduler
+        if self._cluster is not None and self._cluster.spec != cluster:
+            self._cluster.close()
+            self._cluster = None
+        if self._cluster is None:
+            self._cluster = ClusterScheduler(
+                cluster, runs=self.runs, warmup=self.warmup,
+                compile_warmup=self.compile_warmup, reuse=self.reuse,
+                measure_fence=self.measure_fence)
+        record = self.store.append if self.store is not None else None
+        prof = self.profile if profile is None else profile
+        results, run_stats = self._cluster.run(scenarios, hooks=hooks,
+                                               runs=runs, warmup=warmup,
+                                               profile=prof,
+                                               on_result=record)
         self.stats.merge(run_stats)
         return results
 

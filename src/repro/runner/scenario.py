@@ -7,7 +7,8 @@ A ``Scenario`` is one fully-specified benchmark execution:
 The bracketed axes exist only under ``task="serve"`` (the
 continuous-batching serving workload, ``repro.launch.serve``): ``slots``
 is the decode batch width and ``trace`` the deterministic load profile
-(``repro.runner.traces``).  ``ScenarioMatrix`` expands the cartesian
+(``repro.runner.traces``) — a generative profile name or a recorded
+spec file (``trace="file:PATH"``).  ``ScenarioMatrix`` expands the cartesian
 product and applies the
 torchbench-driver selection semantics (regex ``filter`` / ``exclude``
 against the scenario name, plus an exact ``skip`` list — matching the
@@ -96,10 +97,16 @@ class Scenario:
                 object.__setattr__(self, "trace", "uniform")
             if self.slots < 1:
                 raise ValueError(f"serve needs slots >= 1, got {self.slots}")
-            from repro.runner.traces import PROFILES
-            if self.trace not in PROFILES:
+            from repro.runner.traces import FILE_PREFIX, PROFILES
+            if self.trace.startswith(FILE_PREFIX):
+                # a recorded trace-spec file (traces.save_spec); resolved
+                # lazily on the host that runs the cell — a missing file
+                # becomes that cell's error record, not a matrix error
+                if not self.trace[len(FILE_PREFIX):]:
+                    raise ValueError("trace='file:' needs a path")
+            elif self.trace not in PROFILES:
                 raise ValueError(f"unknown trace profile {self.trace!r} "
-                                 f"(known: {PROFILES})")
+                                 f"(known: {PROFILES}, or 'file:PATH')")
         elif self.slots or self.trace:
             raise ValueError(f"slots/trace are serve-only axes "
                              f"(task={self.task!r})")

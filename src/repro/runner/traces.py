@@ -21,6 +21,12 @@ Profiles (``PROFILES``):
               a discrete distribution in [max(1, max_new//2), 2*max_new]
               — staggers slot completion, stressing continuous refill.
 
+A spec is also the *recorded trace* format: ``save_spec``/``load_spec``
+round-trip a TraceSpec through JSON, and a serve scenario can name one
+with ``trace="file:PATH"`` — production-shaped load captured once (or
+synthesized offline) becomes an ordinary scenario axis, replayed with
+the same determinism guarantees as the generative profiles.
+
 Prompt lengths are uniform within a trace: the engine's KV cache keeps a
 single shared position counter per layer, so slots decode in lockstep
 positions (see ``repro.launch.serve``).  Per-slot position tracking is
@@ -144,9 +150,61 @@ def tokens_digest(tokens: Sequence[Sequence[int]]) -> str:
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
+#: scenario ``trace`` prefix selecting a recorded spec file over a
+#: generative profile name
+FILE_PREFIX = "file:"
+
+#: schema tag written by save_spec / required by load_spec
+SPEC_SCHEMA = 1
+
+
+def save_spec(spec: TraceSpec, path: str) -> str:
+    """Write a TraceSpec as JSON (``{"trace_spec": 1, ...fields}``) —
+    the recorded-trace format ``trace="file:PATH"`` serve scenarios
+    replay.  A spec IS the trace: ``generate()`` is a pure function of
+    its fields, so persisting the spec persists the exact requests
+    (prompts, budgets, arrivals) without storing token arrays."""
+    with open(path, "w") as f:
+        json.dump({"trace_spec": SPEC_SCHEMA,
+                   **dataclasses.asdict(spec)}, f, indent=1)
+    return path
+
+
+def load_spec(path: str) -> TraceSpec:
+    """Read a ``save_spec`` file back into a (validated) TraceSpec.
+
+    Strict on shape: every spec field must be present and nothing else —
+    a misspelled or renamed key in a hand-edited file must fail loudly
+    here, not silently replay a default workload under the intended
+    trace's name."""
+    with open(path) as f:
+        d = json.load(f)
+    if not isinstance(d, dict) or d.get("trace_spec") != SPEC_SCHEMA:
+        raise ValueError(f"{path}: not a trace-spec file "
+                         f"(want trace_spec={SPEC_SCHEMA}, "
+                         f"got {d.get('trace_spec') if isinstance(d, dict) else type(d).__name__})")
+    fields = {f.name for f in dataclasses.fields(TraceSpec)}
+    given = set(d) - {"trace_spec"}
+    if given != fields:
+        raise ValueError(f"{path}: trace-spec fields don't match "
+                         f"(missing: {sorted(fields - given)}, "
+                         f"unknown: {sorted(given - fields)})")
+    return TraceSpec(**{k: d[k] for k in fields})
+
+
 def spec_for_scenario(scenario, *, seed: Optional[int] = None) -> TraceSpec:
-    """The TraceSpec a serve scenario denotes: batch -> request count,
-    seq -> prompt length, output budget derived from the prompt length."""
+    """The TraceSpec a serve scenario denotes.
+
+    ``trace="file:PATH"`` replays a recorded spec: the file defines the
+    whole workload (request count, prompt length, budgets, seed) and the
+    scenario's ``batch``/``seq`` axes are advisory labels only.  The file
+    must exist on the host that RUNS the cell — under cluster dispatch
+    that is the worker, so recorded traces need a shared or replicated
+    path.  Otherwise ``trace`` names a generative profile: batch ->
+    request count, seq -> prompt length, output budget derived from the
+    prompt length."""
+    if scenario.trace.startswith(FILE_PREFIX):
+        return load_spec(scenario.trace[len(FILE_PREFIX):])
     return TraceSpec(profile=scenario.trace, requests=scenario.batch,
                      prompt_len=scenario.seq,
                      max_new=default_max_new(scenario.seq),

@@ -1,0 +1,444 @@
+"""Cluster dispatch subsystem: the shared JSONL protocol (pipe + socket
+transports), build-key group scheduling (static LPT vs dynamic stealing),
+the TCP coordinator (registration, work stealing, heartbeat/disconnect
+failure handling, group reassignment), ``run_matrix(..., cluster=...)``
+end-to-end on ``local:N`` workers, and recorded trace-spec files as a
+serve scenario axis."""
+import json
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.runner import (BenchmarkRunner, Coordinator, RunResult, Scenario,
+                          ScenarioMatrix, TraceSpec, assign_shards,
+                          generate_trace, load_spec, parse_cluster_spec,
+                          rank_groups, save_spec)
+from repro.runner.pool import steal_plan
+from repro.runner.protocol import (Channel, LineBuffer, encode, job_message,
+                                   stats_delta)
+from repro.runner.traces import spec_for_scenario
+
+
+# ---- protocol -------------------------------------------------------------
+
+def test_line_buffer_reassembles_partial_lines():
+    buf = LineBuffer()
+    payload = encode({"op": "a"}) + encode({"op": "b"})
+    assert buf.feed(payload[:5]) == []
+    assert buf.feed(payload[5:]) == [{"op": "a"}, {"op": "b"}]
+    assert buf.feed(b"") == []
+    with pytest.raises(ValueError):
+        buf.feed(b"[1, 2]\n")          # a line that is not an object
+
+
+def test_channel_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    ca, cb = Channel.over_socket(a), Channel.over_socket(b)
+    ca.send({"op": "run", "cell": 3})
+    assert cb.recv(5.0) == {"op": "run", "cell": 3}
+    assert cb.recv(0.05) is None and not cb.eof     # timeout, still open
+    a.close()
+    assert cb.recv(5.0) is None and cb.eof          # peer closed
+    cb.close()
+
+
+def test_job_message_carries_hook_params_and_cell_id():
+    sc = Scenario(arch="gemma-2b", task="train", batch=1, seq=8)
+
+    class Hook:
+        slowdown_s, leak_bytes = 0.5, 128
+
+    msg = job_message(sc, runs=2, warmup=0, profile=True, hook=Hook(),
+                      cell=7)
+    assert msg["op"] == "run" and msg["cell"] == 7 and msg["profile"]
+    assert msg["hook"] == {"slowdown_s": 0.5, "leak_bytes": 128}
+    assert Scenario.from_dict(msg["scenario"]) == sc
+    assert "hook" not in job_message(sc, runs=None, warmup=None,
+                                     profile=False)
+
+
+def test_stats_delta_is_monotonic_difference():
+    seen = {}
+    assert stats_delta({"model_builds": 2}, seen) == {"model_builds": 2}
+    assert stats_delta({"model_builds": 3, "errors": 1}, seen) == \
+        {"model_builds": 1, "errors": 1}
+    # a respawned worker's counters restart below the snapshot: clamped
+    assert stats_delta({"model_builds": 1}, seen) == {"model_builds": 0}
+    assert stats_delta(None, seen) == {}
+
+
+# ---- scheduling: groups, static LPT, steal plan ---------------------------
+
+def test_rank_groups_and_steal_plan():
+    scs = [Scenario(arch=a, task=t, batch=1, seq=8, dtype=d)
+           for a in ("a1", "a2") for d in ("fp32", "bf16")
+           for t in ("train", "infer_decode")]
+    ranked = rank_groups(scs)
+    # 4 build-key groups, together in input order, equal weights keep
+    # first-appearance order
+    assert [idxs for idxs, _ in ranked] == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    assert all(w == 5 for _, w in ranked)    # train(4) + infer_decode(1)
+    # static LPT places ranked groups onto the lightest shard — the
+    # assign_shards contract every prior-PR test relies on
+    assert assign_shards(scs, 2) == [[0, 1, 4, 5], [2, 3, 6, 7]]
+    # steal plan: first `jobs` groups seed one worker each (deterministic
+    # start), the tail is the shared deque idle workers pull from
+    seeds, queue = steal_plan(ranked, 2)
+    assert seeds == [[0, 1], [2, 3]] and list(queue) == [[4, 5], [6, 7]]
+    # fewer groups than workers: surplus seeds empty, nothing queued
+    seeds, queue = steal_plan(ranked[:1], 3)
+    assert seeds == [[0, 1], [], []] and not queue
+
+
+def test_parse_cluster_spec():
+    assert parse_cluster_spec("local:2") == ("local", "2")
+    assert parse_cluster_spec("0.0.0.0:5055") == ("bind", "0.0.0.0:5055")
+    for bad in ("", "local:0", "local:x", "justahost", "host:"):
+        with pytest.raises(ValueError):
+            parse_cluster_spec(bad)
+
+
+# ---- coordinator against scripted workers (no jax, fast) ------------------
+
+def _fake_result(job: dict) -> RunResult:
+    sc = Scenario.from_dict(job["scenario"])
+    return RunResult(name=sc.name, bench=sc.bench, arch=sc.arch, task=sc.task,
+                     batch=sc.batch, seq=sc.seq, dtype=sc.dtype, mode=sc.mode,
+                     status="ok", median_us=1.0, runs=1)
+
+
+def _connect_worker(address: str, host: str) -> Channel:
+    h, _, p = address.rpartition(":")
+    chan = Channel.over_socket(socket.create_connection((h, int(p)),
+                                                        timeout=5))
+    chan.send({"op": "register", "host": host, "capacity": 1})
+    return chan
+
+
+def test_coordinator_requeues_dead_workers_group():
+    """The cluster failure contract: a worker dying mid-cell costs exactly
+    that cell (error record naming the host), and the unsent remainder of
+    its group is re-stolen by a surviving worker — the run completes."""
+    scs = [Scenario(arch="a1", task="train", batch=1, seq=s, dtype=d)
+           for d in ("fp32", "bf16") for s in (8, 16)]   # 2 groups of 2
+    coord = Coordinator(bind="127.0.0.1:0", heartbeat_timeout=30.0,
+                        timeout=60.0, connect_timeout=60.0)
+    out = {}
+    runner = threading.Thread(
+        target=lambda: out.update(zip(("results", "stats"),
+                                      coord.run(scs, runs=1))))
+    runner.start()
+    try:
+        # worker A steals the fp32 group, gets cell 0, dies mid-cell
+        chan_a = _connect_worker(coord.address, "fakeA")
+        job = chan_a.recv(10.0)
+        assert job and job["op"] == "run" and job["cell"] == 0
+        chan_a.close()
+        # worker B survives: drains the fp32 remainder + the bf16 group
+        chan_b = _connect_worker(coord.address, "fakeB")
+        served = 0
+        for _ in range(3):
+            job = chan_b.recv(20.0)
+            assert job and job["op"] == "run"
+            served += 1
+            chan_b.send({"op": "result", "cell": job["cell"],
+                         "result": _fake_result(job).to_dict(),
+                         "stats": {"scenarios_run": served,
+                                   "model_builds": 1}})
+        runner.join(30.0)
+        assert not runner.is_alive()
+        chan_b.close()
+    finally:
+        coord.close()
+        runner.join(5.0)
+    results, stats = out["results"], out["stats"]
+    assert [r.name for r in results] == [s.name for s in scs]
+    dead, ok = results[0], results[1:]
+    assert dead.status == "error" and "fakeA" in dead.error
+    assert "disconnect" in dead.error and dead.extra["host"] == "fakeA"
+    assert all(r.status == "ok" and r.extra["host"] == "fakeB" for r in ok)
+    assert all(r.extra["isolated"] for r in results)
+    # worker stats delta-merged (3 cumulative snapshots -> 3 runs, ONE
+    # build), plus the coordinator's own error accounting
+    assert stats.scenarios_run == 4 and stats.errors == 1
+    assert stats.model_builds == 1
+
+
+def test_coordinator_survives_stray_client_garbage():
+    """Non-protocol bytes (port scan, HTTP probe, buggy worker) cost that
+    connection, never the sweep — run() must not raise for cluster
+    faults."""
+    scs = [Scenario(arch="a1", task="train", batch=1, seq=8)]
+    coord = Coordinator(bind="127.0.0.1:0", heartbeat_timeout=30.0,
+                        timeout=60.0, connect_timeout=60.0)
+    out = {}
+    runner = threading.Thread(
+        target=lambda: out.update(zip(("results", "stats"),
+                                      coord.run(scs, runs=1))))
+    runner.start()
+    try:
+        h, _, p = coord.address.rpartition(":")
+        stray = socket.create_connection((h, int(p)), timeout=5)
+        stray.sendall(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n")
+        chan = _connect_worker(coord.address, "real")
+        job = chan.recv(20.0)
+        assert job and job["op"] == "run"
+        chan.send({"op": "result", "cell": job["cell"],
+                   "result": _fake_result(job).to_dict(),
+                   "stats": {"scenarios_run": 1}})
+        runner.join(30.0)
+        assert not runner.is_alive()
+        stray.close()
+        chan.close()
+    finally:
+        coord.close()
+        runner.join(5.0)
+    (rr,), stats = out["results"], out["stats"]
+    assert rr.status == "ok" and rr.extra["host"] == "real"
+    assert stats.scenarios_run == 1 and stats.errors == 0
+
+
+def test_coordinator_reaps_unregistered_pinger():
+    """A client that sends valid JSON but never registers is reaped on a
+    registration deadline from ACCEPT time — last_seen-based reaping
+    would let it refresh itself forever and leak its fd into every
+    select() of the persistent coordinator."""
+    scs = [Scenario(arch="a1", task="train", batch=1, seq=8)]
+    coord = Coordinator(bind="127.0.0.1:0", heartbeat_timeout=1.0,
+                        timeout=60.0, connect_timeout=60.0)
+    out = {}
+    runner = threading.Thread(
+        target=lambda: out.update(zip(("results", "stats"),
+                                      coord.run(scs, runs=1))))
+    runner.start()
+    try:
+        h, _, p = coord.address.rpartition(":")
+        stray = Channel.over_socket(
+            socket.create_connection((h, int(p)), timeout=5))
+        stray.send({"op": "ping"})      # valid JSON, but no register
+        time.sleep(1.6)                 # past the registration deadline
+        chan = _connect_worker(coord.address, "real")
+        job = chan.recv(20.0)
+        assert job and job["op"] == "run"
+        # the stray connection was closed by the coordinator mid-run
+        assert stray.recv(2.0) is None and stray.eof
+        chan.send({"op": "result", "cell": job["cell"],
+                   "result": _fake_result(job).to_dict(),
+                   "stats": {"scenarios_run": 1}})
+        runner.join(30.0)
+        assert not runner.is_alive()
+        stray.close()
+        chan.close()
+    finally:
+        coord.close()
+        runner.join(5.0)
+    (rr,) = out["results"]
+    assert rr.status == "ok" and rr.extra["host"] == "real"
+
+
+def test_coordinator_reaps_idle_dead_worker_before_feeding():
+    """A worker that dies while idle BETWEEN runs must be reaped before
+    the next run's first feed — not handed a cell that instantly becomes
+    a spurious error record while a healthy worker sits ready."""
+    scs = [Scenario(arch="a1", task="train", batch=1, seq=8)]
+    coord = Coordinator(bind="127.0.0.1:0", heartbeat_timeout=30.0,
+                        timeout=60.0, connect_timeout=60.0)
+    try:
+        out1, out2 = {}, {}
+        t1 = threading.Thread(
+            target=lambda: out1.update(zip(("results", "stats"),
+                                           coord.run(scs, runs=1))))
+        t1.start()
+        chan_a = _connect_worker(coord.address, "fakeA")
+        job = chan_a.recv(10.0)
+        assert job and job["op"] == "run"
+        chan_a.send({"op": "result", "cell": job["cell"],
+                     "result": _fake_result(job).to_dict(),
+                     "stats": {"scenarios_run": 1}})
+        t1.join(30.0)
+        assert not t1.is_alive()
+        chan_a.close()                      # dies idle between runs
+        chan_b = _connect_worker(coord.address, "fakeB")
+        time.sleep(0.2)                     # EOF + register reach the kernel
+        t2 = threading.Thread(
+            target=lambda: out2.update(zip(("results", "stats"),
+                                           coord.run(scs, runs=1))))
+        t2.start()
+        job = chan_b.recv(20.0)
+        assert job and job["op"] == "run"
+        chan_b.send({"op": "result", "cell": job["cell"],
+                     "result": _fake_result(job).to_dict(),
+                     "stats": {"scenarios_run": 2}})
+        t2.join(30.0)
+        assert not t2.is_alive()
+        chan_b.close()
+    finally:
+        coord.close()
+    rr1, rr2 = out1["results"][0], out2["results"][0]
+    assert rr1.status == "ok" and rr1.extra["host"] == "fakeA"
+    assert rr2.status == "ok" and rr2.extra["host"] == "fakeB"
+
+
+def test_coordinator_retires_worker_on_unmatched_result():
+    """A result the coordinator can't match to an in-flight cell (e.g. a
+    version-skewed worker omitting the echoed cell id) retires that
+    connection immediately — not after the 1200s per-cell timeout."""
+    scs = [Scenario(arch="a1", task="train", batch=1, seq=s)
+           for s in (8, 16)]               # one group of 2 cells
+    coord = Coordinator(bind="127.0.0.1:0", heartbeat_timeout=30.0,
+                        timeout=60.0, connect_timeout=1.0)
+    out = {}
+    runner = threading.Thread(
+        target=lambda: out.update(zip(("results", "stats"),
+                                      coord.run(scs, runs=1))))
+    runner.start()
+    try:
+        chan = _connect_worker(coord.address, "skewed")
+        job = chan.recv(10.0)
+        assert job and job["op"] == "run"
+        chan.send({"op": "result",        # no "cell" echo: off-protocol
+                   "result": _fake_result(job).to_dict(), "stats": {}})
+        runner.join(30.0)
+        assert not runner.is_alive()
+        chan.close()
+    finally:
+        coord.close()
+        runner.join(5.0)
+    first, second = out["results"]
+    assert first.status == "error" and "unmatched result" in first.error
+    assert first.extra["host"] == "skewed"
+    # the group remainder was requeued; with no workers left it drained
+    # to error records after connect_timeout instead of hanging
+    assert second.status == "error" and "no cluster workers" in second.error
+
+
+def test_coordinator_errors_out_when_no_workers_connect():
+    """No registered worker within connect_timeout: remaining cells become
+    error records instead of hanging the sweep (run_matrix never raises
+    for cluster faults)."""
+    scs = [Scenario(arch="a1", task="train", batch=1, seq=8)]
+    coord = Coordinator(bind="127.0.0.1:0", connect_timeout=0.5)
+    try:
+        t0 = time.monotonic()
+        results, stats = coord.run(scs, runs=1)
+    finally:
+        coord.close()
+    assert time.monotonic() - t0 < 10.0
+    assert len(results) == 1 and results[0].status == "error"
+    assert "no cluster workers" in results[0].error
+    assert stats.errors == 1
+
+
+# ---- cluster local:N end-to-end (real workers, real cells) ----------------
+
+def test_cluster_local2_matches_serial_on_serve_matrix(tmp_path):
+    """The acceptance invariant: cluster="local:2" on a 4-cell serve
+    matrix returns the same result set as serial execution — names in
+    matrix order, every cell ok, generated tokens byte-identical (the
+    PR 2/3 determinism witness) — with extra["host"] stamped and worker
+    builds visible in the parent stats."""
+    from repro.runner import ResultStore
+    matrix = ScenarioMatrix(archs=["gemma-2b"], tasks=("serve",),
+                            batches=(3,), seqs=(8,), slots=(2, 3),
+                            traces=("uniform", "bursty"))
+    assert len(matrix) == 4
+    serial = BenchmarkRunner(runs=1, warmup=0)
+    serial_rrs = serial.run_matrix(matrix)
+    assert all(r.status == "ok" for r in serial_rrs)
+
+    store = ResultStore(str(tmp_path / "s"))
+    clustered = BenchmarkRunner(store=store, runs=1, warmup=0)
+    try:
+        cluster_rrs = clustered.run_matrix(matrix, cluster="local:2")
+    finally:
+        clustered.close()
+
+    assert [r.name for r in cluster_rrs] == [r.name for r in serial_rrs]
+    assert all(r.status == "ok" for r in cluster_rrs)
+    for srr, crr in zip(serial_rrs, cluster_rrs):
+        assert crr.extra["tokens"] == srr.extra["tokens"], crr.name
+        assert crr.extra["tokens_digest"] == srr.extra["tokens_digest"]
+        assert crr.extra["host"].startswith("local")
+        assert crr.extra["isolated"]
+    # 2 build-key groups (slots 2 vs 3): worker builds/compiles merged
+    assert clustered.stats.scenarios_run == 4
+    assert clustered.stats.model_builds >= 1
+    assert clustered.stats.executable_builds >= 2
+    # every cell recorded from the coordinator's on_result callback
+    assert len(list(store.history())) == 4
+
+
+# ---- recorded trace specs (trace="file:...") ------------------------------
+
+def test_trace_spec_save_load_roundtrip(tmp_path):
+    spec = TraceSpec(profile="mixed", requests=5, prompt_len=8, max_new=4,
+                     seed=11)
+    path = save_spec(spec, str(tmp_path / "prod_trace.json"))
+    assert load_spec(path) == spec
+    a, b = generate_trace(spec, vocab=64), generate_trace(load_spec(path),
+                                                          vocab=64)
+    assert [(r.rid, r.arrival_step, r.max_new, r.prompt.tolist())
+            for r in a] == \
+        [(r.rid, r.arrival_step, r.max_new, r.prompt.tolist()) for r in b]
+    # the file carries a schema tag; junk JSON is rejected loudly
+    with open(path) as f:
+        assert json.load(f)["trace_spec"] == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"profile": "uniform"}')
+    with pytest.raises(ValueError):
+        load_spec(str(bad))
+    # strict shape: a misspelled field must fail loudly, not silently
+    # replay a default workload under the intended trace's name
+    typo = tmp_path / "typo.json"
+    typo.write_text(json.dumps({"trace_spec": 1, "profile": "bursty",
+                                "requests": 5, "prompt_len": 8, "seed": 0,
+                                "max_new_tokens": 256}))
+    with pytest.raises(ValueError, match="max_new"):
+        load_spec(str(typo))
+
+
+def test_file_trace_scenario_axis(tmp_path):
+    spec = TraceSpec(profile="bursty", requests=3, prompt_len=8, max_new=4,
+                     seed=9)
+    path = save_spec(spec, str(tmp_path / "t.json"))
+    sc = Scenario(arch="gemma-2b", task="serve", batch=3, seq=8, slots=2,
+                  trace=f"file:{path}")
+    # the file defines the workload; the scenario axes stay labels
+    assert spec_for_scenario(sc) == spec
+    assert sc.name.endswith(f"/x2/file:{path}")
+    # file traces are serve-only, like every trace; empty path rejected
+    with pytest.raises(ValueError):
+        Scenario(arch="gemma-2b", task="serve", trace="file:")
+    with pytest.raises(ValueError):
+        Scenario(arch="gemma-2b", task="train", trace=f"file:{path}")
+    # matrices expand file traces like any other profile
+    m = ScenarioMatrix(archs=["gemma-2b"], tasks=("serve",), batches=(3,),
+                       seqs=(8,), slots=(2,),
+                       traces=("uniform", f"file:{path}"))
+    assert len(m) == 2
+
+
+def test_file_trace_replays_identically_to_inline_profile(tmp_path):
+    """A recorded spec file replays the exact same workload as the inline
+    profile it was recorded from: same requests in, byte-identical tokens
+    out (the missing-file case degrades to that cell's error record)."""
+    inline = Scenario(arch="gemma-2b", task="serve", batch=3, seq=8,
+                      slots=2, trace="bursty")
+    path = save_spec(spec_for_scenario(inline), str(tmp_path / "rec.json"))
+    recorded = Scenario(arch="gemma-2b", task="serve", batch=3, seq=8,
+                        slots=2, trace=f"file:{path}")
+    runner = BenchmarkRunner(runs=1, warmup=0)
+    rr_inline = runner.run(inline, record=False)
+    rr_file = runner.run(recorded, record=False)
+    assert rr_inline.status == "ok" and rr_file.status == "ok"
+    assert rr_file.extra["tokens"] == rr_inline.extra["tokens"]
+    assert rr_file.extra["tokens_digest"] == rr_inline.extra["tokens_digest"]
+    assert rr_file.extra["trace"] == f"file:{path}"
+    # same (build_key, mode, max_len): the second replay reused the engine
+    assert rr_file.cache["executable_reused"]
+    missing = Scenario(arch="gemma-2b", task="serve", batch=3, seq=8,
+                       slots=2, trace="file:/nonexistent/trace.json")
+    rr = runner.run(missing, record=False)
+    assert rr.status == "error" and "trace.json" in rr.error
