@@ -18,6 +18,7 @@ import json
 from benchmarks.common import emit, make_runner, results_path
 from repro.profiler import build_report, detect, format_table
 from repro.runner import ScenarioMatrix
+from repro.tuning import enqueue_jobs, jobs_from_findings
 
 STEP_ARCHS = ["gemma-2b", "mamba2-2.7b", "recurrentgemma-9b", "mixtral-8x7b"]
 
@@ -69,6 +70,17 @@ def main(fast: bool = False, runner=None) -> None:
          f"warn={report['by_severity'].get('warn', 0)};"
          f"info={report['by_severity'].get('info', 0)};"
          f"profiled={report['cells_profiled']}/{report['cells']}")
+    # detector -> autotuner bridge: data_movement_bound / low_util findings
+    # become tuning jobs for the Pallas kernels their arch uses, enqueued
+    # for the next sweep (repro.tuning.run_sweep over cases_from_jobs)
+    jobs = jobs_from_findings(findings, recs)
+    queue_path = results_path("tuning_queue.json")
+    if jobs:
+        enqueue_jobs(jobs, queue_path)
+    emit("profile_report/tuning_jobs", 0.0,
+         f"n={len(jobs)};queue={queue_path}")
+    report["tuning_jobs"] = jobs
+    report["tuning_queue"] = str(queue_path)
     report["profiles"] = [_prof_summary(r) for r in recs]
     with open(results_path("profile_report.json"), "w") as f:
         json.dump(report, f, indent=1)

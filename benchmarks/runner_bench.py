@@ -52,6 +52,19 @@ overhead).  The ``steal_win`` row is static/stealing wall — > 1.0
 whenever guessed and actual cost diverge, which is the load-balance case
 the deque exists for.
 
+Part 6 — kernel autotuning (``repro.tuning``): flash-attention + rglru
+(+ ssd when not ``--fast``) launch-parameter sweeps dispatched as
+``task="kernel"`` cells through the same sharded pool, winners recorded
+in the tuning DB (``results/tuning_db.json``), and the tuned-vs-default
+median ratio reported per kernel.  The ratio is >= 1.0 by construction —
+the ops default is always a swept candidate and the winner is the argmin
+(ties to the default), so the DB never serves a config slower than the
+default it replaces.  The detector bridge is then demonstrated end to
+end: the three sweep archs are profiled, ``low_util`` is forced to fire
+(``util_rel=1.0`` flags every below-median cell — deterministic with 3+
+distinct cells), and the resulting findings enqueue tuning jobs into
+``results/tuning_queue.json``.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -64,6 +77,9 @@ from benchmarks.common import emit, results_path
 from repro.core.harness import RegressionHook, measure
 from repro.core.suite import get_benchmark
 from repro.runner import BenchmarkRunner, Scenario, ScenarioMatrix
+from repro.profiler import Thresholds, detect
+from repro.tuning import (TuningDB, enqueue_jobs, jobs_from_findings,
+                          make_case, run_sweep, sweep_matrix)
 
 ARCH = "gemma-2b"
 BATCH, SEQ = 2, 32
@@ -146,7 +162,30 @@ def _serve_matrix(fast: bool) -> ScenarioMatrix:
 
 def scenario_matrices(fast: bool = False):
     """The matrices this benchmark executes (``benchmarks.run --list`` hook)."""
-    return [_sweep_matrix(fast), _serve_matrix(fast), _skew_matrix(fast)]
+    return [_sweep_matrix(fast), _serve_matrix(fast), _skew_matrix(fast),
+            _tuning_matrix(fast)]
+
+
+# ---- part 6: kernel autotuning --------------------------------------------
+
+def _tuning_cases(fast: bool):
+    """Small tuning cases sized like the probe cells above: one per Pallas
+    kernel (ssd only on the full run — its interpret-mode chunks are the
+    slowest cells of the sweep)."""
+    cases = [make_case("flash_attention", B=2, S=64, H=2, K=2, D=32),
+             make_case("rglru", B=1, S=64, D=64)]
+    if not fast:
+        cases.append(make_case("ssd", B=1, S=64, H=2, P=16, N=16))
+    return cases
+
+
+def _tuning_candidates(fast: bool) -> int:
+    return 3 if fast else 6
+
+
+def _tuning_matrix(fast: bool) -> ScenarioMatrix:
+    return sweep_matrix(_tuning_cases(fast),
+                        max_candidates=_tuning_candidates(fast))
 
 
 # ---- part 5: static LPT vs stealing vs cluster ----------------------------
@@ -299,6 +338,51 @@ def main(fast: bool = False, runner=None) -> None:
     emit("runner_bench/steal_win_vs_static", 0.0,
          f"{steal_win:.2f}x;cluster_vs_steal={cluster_ratio:.2f}x")
 
+    # kernel autotuning: per-kernel candidate sweeps through the sharded
+    # pool, winners recorded in the tuning DB, tuned-vs-default ratio per
+    # kernel (fence ON here — candidate medians must be comparable, so the
+    # timed loops serialize while builds/compiles still overlap)
+    cases = _tuning_cases(fast)
+    tuning_db = TuningDB.load(results_path("tuning_db.json"))
+    tune_runner = BenchmarkRunner(runs=max(3, runs), jobs=JOBS)
+    t0 = time.perf_counter()
+    try:
+        tuning = run_sweep(cases, tune_runner, db=tuning_db,
+                           max_candidates=_tuning_candidates(fast))
+    finally:
+        tune_runner.close()
+    tuning_wall = time.perf_counter() - t0
+    for row in tuning["cases"]:
+        if row["status"] != "ok":
+            raise RuntimeError(f"tuning sweep failed for {row['case']}")
+        winner = " ".join(f"{k}={v}" for k, v in row["winner"].items())
+        emit(f"runner_bench/tuning_ratio/{row['kernel']}", 0.0,
+             f"{row['ratio']:.2f}x;winner={winner};"
+             f"default_us={row['default_us']:.0f}")
+    emit("runner_bench/tuning_sweep_s", tuning_wall * 1e6,
+         f"jobs={JOBS};{sum(r['candidates'] for r in tuning['cases'])}"
+         f"_candidates;db={tuning['db_path']}")
+
+    # detector bridge: profile the three kernel-bearing archs, force
+    # low_util to fire (util_rel=1.0 flags every below-median cell —
+    # deterministic once 3+ cells have distinct utilizations), and turn
+    # the findings into enqueued tuning jobs
+    bridge_runner = BenchmarkRunner(runs=max(3, runs))
+    bridge_recs = [bridge_runner.run(Scenario(arch=a, task="train", batch=1,
+                                              seq=16, mode="jit"),
+                                     record=False, profile=True)
+                   for a in ("gemma-2b", "mamba2-2.7b", "recurrentgemma-9b")]
+    del bridge_runner
+    gc.collect()
+    bridge_findings = detect(bridge_recs, Thresholds(util_rel=1.0))
+    tuning_jobs = jobs_from_findings(bridge_findings, bridge_recs,
+                                     db=tuning_db)
+    queue_path = results_path("tuning_queue.json")
+    enqueue_jobs(tuning_jobs, queue_path)
+    emit("runner_bench/tuning_jobs", 0.0,
+         f"n={len(tuning_jobs)};findings={len(bridge_findings)};"
+         f"queue={queue_path}")
+
     with open(results_path("runner_bench.json"), "w") as f:
         json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
                    "seed_path_s": seed_s, "runner_path_s": runner_s,
@@ -322,7 +406,19 @@ def main(fast: bool = False, runner=None) -> None:
                                   "stealing_s": steal_s,
                                   "cluster_local_s": cluster_s,
                                   "steal_win_vs_static": steal_win,
-                                  "cluster_ratio_vs_steal": cluster_ratio}},
+                                  "cluster_ratio_vs_steal": cluster_ratio},
+                   "tuning": {"jobs": JOBS, "wall_s": tuning_wall,
+                              "db_path": tuning["db_path"],
+                              "cases": tuning["cases"],
+                              "recorded": tuning["recorded"],
+                              "bridge": {
+                                  "profiled": [rr.name for rr in bridge_recs],
+                                  "findings": [
+                                      {"rule": fi.rule, "cell": fi.cell,
+                                       "severity": fi.severity}
+                                      for fi in bridge_findings],
+                                  "enqueued": tuning_jobs,
+                                  "queue_path": str(queue_path)}}},
                   f, indent=1)
 
 

@@ -110,4 +110,48 @@ for pid in pids:
 print("cluster smoke OK")
 EOF
 
+echo "== tuning gate: 2-candidate sweep under --jobs 2, DB hit on next trace =="
+python - <<'EOF'
+import os
+import tempfile
+
+tmp = tempfile.mkdtemp(prefix="smoke_tuning_")
+os.environ["REPRO_TUNING_DB"] = os.path.join(tmp, "tuning_db.json")
+
+from repro.runner import BenchmarkRunner
+from repro.tuning import make_case, run_sweep
+from repro.kernels.flash_attention import ops as fops
+import jax
+import jax.numpy as jnp
+
+case = make_case("flash_attention", B=1, S=64, H=2, K=2, D=32)
+runner = BenchmarkRunner(runs=1, warmup=0, compile_warmup=0, jobs=2,
+                         measure_fence=False)
+try:
+    summary = run_sweep([case], runner, max_candidates=2)
+finally:
+    runner.close()
+row = summary["cases"][0]
+assert row["status"] == "ok", row
+assert os.path.exists(summary["db_path"]), summary["db_path"]
+print(f"  {row['case']}: winner={row['winner']} "
+      f"({row['ratio']:.2f}x vs default)")
+
+# a blocks-unspecified trace must now serve the recorded winner
+served = {}
+orig = fops.flash_attention_bh
+def spy(*a, **kw):
+    served.update({k: kw[k] for k in ("block_q", "block_k")})
+    return orig(*a, **kw)
+fops.flash_attention_bh = spy
+ks = jax.random.split(jax.random.key(0), 3)
+q = jax.random.normal(ks[0], (1, 64, 2, 32), jnp.float32)
+k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+fops.flash_attention(q, k, v)
+fops.flash_attention_bh = orig
+assert served == dict(row["winner"]), (served, row["winner"])
+print("tuning smoke OK")
+EOF
+
 echo "smoke OK"

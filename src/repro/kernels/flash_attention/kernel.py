@@ -15,11 +15,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.validate import resolve_interpret, validate_block
 
 NEG_INF = -1e30
 
@@ -95,13 +98,21 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_bh(q, k, v, *, mask_type: str = "causal", window: int = 0,
                        q_offset: int = 0, block_q: int = 128, block_k: int = 128,
                        softmax_scale=None, softcap: float = 0.0,
-                       interpret: bool = True):
-    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D).  GQA handled in ops.py."""
+                       interpret: Optional[bool] = None):
+    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D).  GQA handled in ops.py.
+
+    Blocks need not divide the sequence (the kernel masks the tail) but
+    must fit it — an oversized block is rejected, not silently clamped,
+    so a measured launch shape is always the requested one.
+    ``interpret=None`` auto-detects (interpreted off-TPU), uniformly with
+    the rglru/ssd kernels (``kernels.validate.resolve_interpret``).
+    """
     BH, Sq, D = q.shape
     _, Sk, _ = k.shape
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Sk)
+    validate_block("flash_attention", "Sq", Sq, "block_q", block_q)
+    validate_block("flash_attention", "Sk", Sk, "block_k", block_k)
+    interpret = resolve_interpret(interpret)
     nq = pl.cdiv(Sq, block_q)
     nk = pl.cdiv(Sk, block_k)
 

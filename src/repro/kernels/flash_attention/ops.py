@@ -1,21 +1,34 @@
-"""Public flash-attention op: GQA layout handling + platform dispatch."""
+"""Public flash-attention op: GQA layout handling + tuned-block dispatch."""
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_bh
+from repro.kernels.validate import dtype_name, validate_block
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _tuned_blocks(Sq: int, Sk: int, D: int, dtype):
+    """Tuning-DB lookup for this trace's shape signature (None on miss or
+    if a stale entry no longer validates)."""
+    from repro.tuning.db import tuned_params
+
+    t = tuned_params("flash_attention", f"Sq{Sq},Sk{Sk},D{D}", dtype_name(dtype))
+    if not t:
+        return None
+    try:
+        bq = validate_block("flash_attention", "Sq", Sq, "block_q", t["block_q"])
+        bk = validate_block("flash_attention", "Sk", Sk, "block_k", t["block_k"])
+    except (KeyError, ValueError):
+        return None
+    return bq, bk
 
 
 def flash_attention(q, k, v, *, mask_type: str = "causal", window: int = 0,
                     q_offset: int = 0, softmax_scale: Optional[float] = None,
-                    softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
+                    softcap: float = 0.0, block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: Optional[bool] = None):
     """q (B, Sq, H, D), k/v (B, Sk, K, D) with H % K == 0 -> (B, Sq, H, D).
 
@@ -23,13 +36,29 @@ def flash_attention(q, k, v, *, mask_type: str = "causal", window: int = 0,
     group — the kernel sees plain MHA tiles (on real TPU the repeat is free:
     it lowers to a broadcast in the index map of a production variant; here
     we keep the memory model simple and explicit).
+
+    ``block_q``/``block_k`` default to ``None``: the tuning DB
+    (``repro.tuning.db``) is consulted for this (shape, dtype) at trace
+    time, falling back to ``min(128, S)`` on a miss.  Explicit blocks are
+    validated strictly (ValueError), never clamped.  ``interpret=None``
+    resolves in the kernel layer (interpreted off-TPU).
     """
     B, Sq, H, D = q.shape
     _, Sk, K, _ = k.shape
     assert H % K == 0
     G = H // K
-    if interpret is None:
-        interpret = not _on_tpu()
+    if block_q is None and block_k is None:
+        tuned = _tuned_blocks(Sq, Sk, D, q.dtype)
+        if tuned is not None:
+            block_q, block_k = tuned
+    if block_q is None:
+        block_q = min(128, Sq)
+    else:
+        validate_block("flash_attention", "Sq", Sq, "block_q", block_q)
+    if block_k is None:
+        block_k = min(128, Sk)
+    else:
+        validate_block("flash_attention", "Sk", Sk, "block_k", block_k)
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Sk, D)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Sk, D)

@@ -17,11 +17,14 @@ Grid: (B, n_feature_tiles, n_time_blocks) — time innermost (sequential).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.validate import resolve_interpret, validate_block
 
 
 def _rglru_kernel(a_ref, b_ref, h_ref, state_scr, *, block_t: int):
@@ -48,12 +51,19 @@ def _rglru_kernel(a_ref, b_ref, h_ref, state_scr, *, block_t: int):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_d", "interpret"))
 def rglru_scan_kernel(a, b, *, block_t: int = 16, block_d: int = 128,
-                      interpret: bool = True):
-    """a, b (B, S, D) -> h (B, S, D); h_t = a_t h_{t-1} + b_t, h_0 = b_0."""
+                      interpret: Optional[bool] = None):
+    """a, b (B, S, D) -> h (B, S, D); h_t = a_t h_{t-1} + b_t, h_0 = b_0.
+
+    The carried state scratch makes the time grid sequential, so blocks
+    must divide their dimensions exactly — validated with a clear error
+    (``ops.rglru`` pads to a multiple first; direct callers and tuning
+    candidates must pass dividing blocks).  ``interpret=None``
+    auto-detects, uniformly with the flash/ssd kernels.
+    """
     B, S, D = a.shape
-    block_t = min(block_t, S)
-    block_d = min(block_d, D)
-    assert S % block_t == 0 and D % block_d == 0
+    validate_block("rglru", "S", S, "block_t", block_t, divides=True)
+    validate_block("rglru", "D", D, "block_d", block_d, divides=True)
+    interpret = resolve_interpret(interpret)
     nt = S // block_t
     nd = D // block_d
     kern = functools.partial(_rglru_kernel, block_t=block_t)

@@ -1,30 +1,63 @@
-"""Public RG-LRU op: gate math in fp32 + kernel dispatch + padding."""
+"""Public RG-LRU op: gate math in fp32 + tuned kernel dispatch + padding."""
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.rglru.kernel import rglru_scan_kernel
+from repro.kernels.validate import dtype_name, validate_block
 
 
-def rglru(x, a, *, block_t: int = 16, interpret: Optional[bool] = None):
+def _tuned_blocks(S: int, D: int, dtype):
+    """Tuning-DB lookup keyed on the *unpadded* (S, D) signature (None on
+    miss or if a stale entry no longer validates as a bound)."""
+    from repro.tuning.db import tuned_params
+
+    t = tuned_params("rglru", f"S{S},D{D}", dtype_name(dtype))
+    if not t:
+        return None
+    try:
+        bt = validate_block("rglru", "S", S, "block_t", t["block_t"])
+        bd = validate_block("rglru", "D", D, "block_d", t["block_d"])
+    except (KeyError, ValueError):
+        return None
+    return bt, bd
+
+
+def rglru(x, a, *, block_t: Optional[int] = None,
+          block_d: Optional[int] = None, interpret: Optional[bool] = None):
     """Linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t over (B,S,D).
 
     Matches repro.models.rglru.rglru_scan with zero initial state.
+
+    ``block_t``/``block_d`` default to ``None``: the tuning DB is
+    consulted for this (shape, dtype) at trace time, falling back to
+    ``block_t=min(16, S)`` and the lane-width default ``block_d=128``.
+    Explicit blocks are validated as bounds (``1 <= block <= dim``) and
+    S/D are padded up to multiples so the kernel's divisibility
+    requirement always holds; invalid blocks raise, never clamp.
     """
     B, S, D = x.shape
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    if block_t is None and block_d is None:
+        tuned = _tuned_blocks(S, D, x.dtype)
+        if tuned is not None:
+            block_t, block_d = tuned
+    if block_t is None:
+        bt = min(16, S)
+    else:
+        bt = validate_block("rglru", "S", S, "block_t", block_t)
     b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a.astype(jnp.float32)), 1e-12)) * x.astype(jnp.float32)
-    bt = min(block_t, S)
     pad_t = (bt - S % bt) % bt
-    pad_d = (128 - D % 128) % 128 if D > 128 else 0
+    if block_d is None:
+        pad_d = (128 - D % 128) % 128 if D > 128 else 0
+        bd = min(128, D + pad_d)
+    else:
+        bd = validate_block("rglru", "D", D, "block_d", block_d)
+        pad_d = (bd - D % bd) % bd
     af = a.astype(jnp.float32)
     if pad_t or pad_d:
         af = jnp.pad(af, ((0, 0), (0, pad_t), (0, pad_d)))
         b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
-    h = rglru_scan_kernel(af, b, block_t=bt, block_d=min(128, af.shape[-1]),
-                          interpret=interpret)
+    h = rglru_scan_kernel(af, b, block_t=bt, block_d=bd, interpret=interpret)
     return h[:, :S, :D].astype(x.dtype)

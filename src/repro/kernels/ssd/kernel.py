@@ -16,11 +16,14 @@ a production variant; kept simple here).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.validate import resolve_interpret, validate_block
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
@@ -62,14 +65,19 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_bh(x, dt, a, bm, cm, *, chunk: int = 128, interpret: bool = True):
+def ssd_bh(x, dt, a, bm, cm, *, chunk: int = 128,
+           interpret: Optional[bool] = None):
     """x (BH, S, P), dt (BH, S, 1), a (BH, 1), bm/cm (BH, S, N) -> y (BH, S, P).
 
-    S must be a multiple of chunk (ops.py pads with identity steps).
+    The carried state scratch makes the chunk grid sequential, so S must
+    be a multiple of chunk — validated with a clear error (``ops.ssd``
+    pads with identity steps first).  ``interpret=None`` auto-detects,
+    uniformly with the flash/rglru kernels.
     """
     BH, S, P = x.shape
     N = bm.shape[-1]
-    assert S % chunk == 0
+    validate_block("ssd", "S", S, "chunk", chunk, divides=True)
+    interpret = resolve_interpret(interpret)
     nc = S // chunk
     kern = functools.partial(_ssd_kernel, chunk=chunk)
     return pl.pallas_call(

@@ -1,0 +1,89 @@
+"""Shared launch-parameter validation for the Pallas kernels.
+
+One helper, three kernels, two constraint kinds:
+
+* **bound** (``divides=False``): a block must fit inside its dimension
+  (``1 <= block <= dim``) — flash attention's q/k blocks (the kernel
+  masks the tail, so non-dividing blocks are fine) and every ops-level
+  block of a kernel that pads (rglru time blocks, ssd chunks).
+* **divisibility** (``divides=True``): the kernel-level grids that carry
+  scratch state across a sequential axis require the block to divide the
+  dimension exactly (rglru's ``S % block_t == 0``, ssd's ``S % chunk``).
+
+Both kinds raise a ``ValueError`` naming the kernel, the offending
+dimension, and the nearest valid block — replacing the seed kernels'
+bare ``assert``s and silent ``min(block, dim)`` clamps, so a bad tuning
+candidate (or a hand-written call) fails loudly instead of measuring a
+different launch shape than the caller asked for.  The autotuner's
+search space (``repro.tuning.space``) uses the same helper, which is
+what guarantees no generated candidate can assert or OOM.
+
+``resolve_interpret`` is the one place Pallas execution mode is decided:
+``None`` means auto-detect (interpret off real TPU, interpreted
+elsewhere) — previously only ``ops.flash_attention`` auto-detected while
+a direct ``flash_attention_bh`` call defaulted to interpreted even on
+TPU; now all three kernels resolve it identically at the kernel layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def nearest_valid_block(dim: int, block: int, *, divides: bool = False) -> int:
+    """The valid block size closest to ``block`` for ``dim``.
+
+    ``divides=False``: clamp into ``[1, dim]``.  ``divides=True``: the
+    divisor of ``dim`` nearest to ``block`` (ties go to the larger
+    divisor — bigger blocks amortise grid overhead).
+    """
+    if dim < 1:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    if not divides:
+        return max(1, min(block, dim))
+    divisors = [d for d in range(1, dim + 1) if dim % d == 0]
+    return min(reversed(divisors), key=lambda d: abs(d - block))
+
+
+def validate_block(kernel: str, dim_name: str, dim: int,
+                   block_name: str, block: int, *,
+                   divides: bool = False) -> int:
+    """Validate one launch parameter; returns it unchanged when valid.
+
+    Raises ``ValueError`` naming the kernel, the offending dimension,
+    and the nearest valid block — the shared contract between the
+    tuner's search space and direct kernel callers.
+    """
+    if not isinstance(block, int) or isinstance(block, bool):
+        raise ValueError(f"{kernel}: {block_name} must be an int, "
+                         f"got {block!r}")
+    if block < 1 or block > dim:
+        raise ValueError(
+            f"{kernel}: {block_name}={block} is outside [1, {dim_name}={dim}] "
+            f"(nearest valid: {nearest_valid_block(dim, block, divides=divides)})")
+    if divides and dim % block != 0:
+        raise ValueError(
+            f"{kernel}: {block_name}={block} does not divide {dim_name}={dim} "
+            f"(nearest valid: {nearest_valid_block(dim, block, divides=True)})")
+    return block
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Uniform Pallas execution-mode resolution for all three kernels:
+    ``None`` -> interpreted everywhere except a real TPU backend."""
+    if interpret is None:
+        import jax
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def dtype_name(dtype) -> str:
+    """The tuning-DB dtype tag for an input array dtype (mirrors the
+    scenario ``dtype`` axis; unknown dtypes get their jnp name so they
+    simply never match a tuned entry)."""
+    import jax.numpy as jnp
+
+    if dtype == jnp.float32:
+        return "fp32"
+    if dtype == jnp.bfloat16:
+        return "bf16"
+    return str(dtype)

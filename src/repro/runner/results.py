@@ -68,6 +68,29 @@ decode latencies* (not step times) and ``runs`` is the request count:
                                   the serial-vs-sharded determinism witness
     extra["tokens_digest"] str    sha256 of extra["tokens"]
 
+Kernel micro-bench cells (``task="kernel"``, the autotuner's candidate
+timings — ``repro.tuning``; still schema v1): the scenario ``arch`` axis
+holds a tuning *candidate id* (``kernel@DIMS@PARAMS``, e.g.
+``flash_attention@B2,S128,H4,K2,D64@block_q=64,block_k=128``) instead of
+a registry arch, ``mode`` is always ``"jit"``, ``batch``/``seq`` mirror
+the case's B/S dims, and the timing fields follow the normal step-cell
+``measure()`` protocol (median-of-N over the jitted ops-layer call,
+compile excluded).  Their decoded identity rides in ``extra``:
+
+    extra["tuning_kernel"]    str   kernel name ("flash_attention" |
+                                  "rglru" | "ssd")
+    extra["tuning_case"]      str   case id "kernel@DIMS" — the (kernel,
+                                  shape) tuning problem this candidate
+                                  belongs to
+    extra["tuning_signature"] str   the tuning-DB shape signature (what
+                                  ``kernels/*/ops.py`` recomputes at
+                                  trace time, e.g. "Sq128,Sk128,D64")
+    extra["tuning_params"]    dict  this candidate's launch parameters
+                                  (e.g. {"block_q": 64, "block_k": 128})
+    extra["tuning_default"]   bool  this candidate IS the ops-layer
+                                  default (always swept, so a recorded
+                                  winner is never slower than it)
+
 Profiled cells (``run(..., profile=True)`` / ``benchmarks.run --profile``;
 the measured profiling subsystem ``src/repro/profiler/``) additionally
 carry the phase timeline + op-class attribution (still schema v1; eager

@@ -218,6 +218,10 @@ class BenchmarkRunner:
         if scenario.task == "serve":
             return self._run_serve(scenario, hook=hook, record=record,
                                    profile=prof)
+        if scenario.task == "kernel":
+            return self._run_kernel(scenario, hook=hook, runs=runs,
+                                    warmup=warmup, record=record,
+                                    profile=prof)
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
         phase_log: Optional[List[Tuple[float, float]]] = None
@@ -259,6 +263,69 @@ class BenchmarkRunner:
             self.stats.errors += 1
             # a failed measure may have consumed donated buffers mid-loop:
             # evict the cached executable so the next run rebuilds cleanly
+            self._execs.pop(scenario, None)
+            rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
+                                      wall_s=time.perf_counter() - t0)
+        if record and self.store is not None:
+            self.store.append(rr)
+        return rr
+
+    # ---- kernel micro-bench path (the autotuner's cells) -----------------
+
+    def _run_kernel(self, scenario: Scenario, *,
+                    hook: Optional[RegressionHook] = None,
+                    runs: Optional[int] = None,
+                    warmup: Optional[int] = None,
+                    record: bool = True, profile: bool = False) -> RunResult:
+        """One tuning candidate (``task="kernel"``): decode the candidate
+        id from the ``arch`` axis (``repro.tuning.space``), jit its
+        ops-layer call, and measure it under the standard ``measure()``
+        protocol — so a sweep's cells dispatch, shard, fence, and record
+        exactly like model cells.  The candidate's identity lands under
+        the well-known ``tuning_*`` extras (``runner/results.py``).
+
+        The compiled candidate is cached in ``self._execs`` like a model
+        executable: re-measuring a candidate (regression CI, the pool's
+        fenced re-run) hits the cache, and the pool worker's ledger
+        accounting stays correct."""
+        from repro.tuning import space as tuning_space
+        t0 = time.perf_counter()
+        self.stats.scenarios_run += 1
+        phase_log: Optional[List[Tuple[float, float]]] = None
+        try:
+            case, params = tuning_space.parse_candidate(
+                scenario.arch, dtype=scenario.dtype)
+            if self.reuse and scenario in self._execs:
+                self.stats.executable_cache_hits += 1
+                entry = self._execs[scenario]
+                cache = {"model_reused": True, "executable_reused": True}
+            else:
+                step, args = tuning_space.bench_callable(case, params)
+                entry = _ExecEntry(jitted=prepare(step), step=step,
+                                   args=args, donate=())
+                self.stats.executable_builds += 1
+                if self.reuse:
+                    self._execs[scenario] = entry
+                cache = {"model_reused": False, "executable_reused": False}
+            if profile:
+                phase_log = []
+            wu = self.warmup if warmup is None else warmup
+            if not cache["executable_reused"]:
+                wu += self.compile_warmup
+            m = measure(scenario.name, entry.step, entry.args, entry.donate,
+                        runs=runs or self.runs, warmup=wu, hook=hook,
+                        jitted=entry.jitted, phase_log=phase_log)
+            rr = RunResult.from_measurement(
+                scenario, m, wall_s=time.perf_counter() - t0, cache=cache,
+                extra=tuning_space.result_extra(case, params))
+            if cache["executable_reused"]:
+                rr.compile_us = 0.0
+            if profile:
+                rr.extra.update(self._profile_extra(
+                    scenario, phase_log,
+                    lambda: entry.jitted.lower(*entry.args)))
+        except Exception as e:  # noqa: BLE001 — fault containment per cell
+            self.stats.errors += 1
             self._execs.pop(scenario, None)
             rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
                                       wall_s=time.perf_counter() - t0)

@@ -24,9 +24,16 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 #: single-step tasks measured by the harness ``measure()`` protocol
 STEP_TASKS = ("train", "infer_prefill", "infer_decode")
 
-#: all tasks, including the continuous-batching serving workload, which is
-#: a whole engine run per cell (``repro.launch.serve``), not a single step
-TASKS = STEP_TASKS + ("serve",)
+#: all tasks: the step tasks, the continuous-batching serving workload
+#: (a whole engine run per cell, ``repro.launch.serve``), and the kernel
+#: micro-bench cells of the autotuner (``repro.tuning``), whose ``arch``
+#: axis names a tuning candidate instead of a registry arch
+TASKS = STEP_TASKS + ("serve", "kernel")
+
+#: the only execution mode for kernel micro-bench cells: a tuning
+#: candidate is one jitted ops-layer call — eager dispatch and the
+#: model-level reduced-config/donation modes don't apply
+KERNEL_MODES = ("jit",)
 
 #: execution modes valid for the serving task: the continuous-batching
 #: engine is a jitted decode loop — op-by-op dispatch (eager) and the
@@ -110,6 +117,19 @@ class Scenario:
         elif self.slots or self.trace:
             raise ValueError(f"slots/trace are serve-only axes "
                              f"(task={self.task!r})")
+        if self.task == "kernel":
+            if self.mode not in KERNEL_MODES:
+                raise ValueError(f"kernel cells support modes {KERNEL_MODES}, "
+                                 f"not {self.mode!r}")
+            # arch must be a tuning candidate id "kernel@DIMS@PARAMS"
+            # (full decode happens lazily on the host that runs the cell,
+            # like serve's trace files — an unknown kernel becomes that
+            # cell's error record, not a matrix error)
+            if self.arch.count("@") != 2:
+                raise ValueError(
+                    f"kernel cells need a candidate-id arch "
+                    f"('kernel@DIMS@PARAMS', see repro.tuning.space), "
+                    f"got {self.arch!r}")
 
     @property
     def bench(self) -> str:
@@ -140,6 +160,11 @@ class Scenario:
         base = (self.arch, self.dtype, self.mode in MODE_OVERRIDES and self.mode)
         if self.task == "serve":
             return base + ("serve", self.slots)
+        if self.task == "kernel":
+            # one group per candidate: kernel cells share no arch build,
+            # so the scheduler is free to place (and steal) them singly —
+            # the sweep is embarrassingly parallel
+            return ("kernel", self.arch, self.dtype)
         return base
 
     def to_dict(self) -> dict:
@@ -179,6 +204,9 @@ class ScenarioMatrix:
     axes inert).  Serve cells silently skip modes outside
     ``SERVE_MODES`` — a matrix mixing ``tasks=("train", "serve")`` with
     ``modes=("eager", ...)`` expands the eager cell for train only.
+    ``task="kernel"`` (the autotuner's micro-bench cells, opt-in like
+    serve; archs are tuning candidate ids) likewise expands only under
+    ``mode="jit"``.
 
     Expansion (the cartesian product AND the regex selection) is memoized
     on the current field values — ``len(m)`` / ``for s in m`` / nested
@@ -217,6 +245,11 @@ class ScenarioMatrix:
                 cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
                                   dtype=dtype, mode=mode, slots=k, trace=t)
                          for k, t in itertools.product(self.slots, self.traces)]
+            elif task == "kernel":
+                if mode not in KERNEL_MODES:
+                    continue      # kernel micro-bench cells are jit-only
+                cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
+                                  dtype=dtype, mode=mode)]
             else:
                 cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
                                   dtype=dtype, mode=mode)]

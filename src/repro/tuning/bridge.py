@@ -1,0 +1,182 @@
+"""The detector bridge: profiler findings -> enqueued tuning jobs.
+
+Closes the paper's profile -> find -> fix loop (the half PR 4 left open):
+``data_movement_bound`` and ``low_util`` findings are exactly the
+signatures a better kernel launch shape can move — a memory-bound cell
+wants tiles that reuse more per byte, a low-utilization cell wants tiles
+that fill the machine — so each such finding on a profiled cell enqueues
+tuning jobs for the Pallas kernels its arch *uses* (attention archs ->
+flash_attention, ``d_state`` archs -> ssd, ``lru_width`` archs ->
+rglru), shaped by the cell's own (batch, seq) and the arch's reduced
+config (the config the measured cells actually build).
+
+The queue is a schema-tagged JSON file next to the tuning DB
+(``results/tuning_queue.json``): ``benchmarks/profile_report.py`` writes
+it after detection, and ``cases_from_jobs`` turns it back into
+``KernelCase``s for ``tuning.sweep.run_sweep``.  Jobs carry an
+``in_db`` flag so a report can tell "needs sweeping" from "already
+tuned, still slow" — the latter is a real finding about the kernel, not
+the launch shape.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.tuning import space
+from repro.tuning.db import TuningDB, entry_key
+
+QUEUE_SCHEMA_KEY = "tuning_queue"
+QUEUE_SCHEMA_VERSION = 1
+
+#: detector rules that enqueue tuning work — the launch-shape-sensitive
+#: inefficiency signatures (see module docstring)
+TUNE_RULES = ("data_movement_bound", "low_util")
+
+
+def kernels_for_arch(arch: str) -> List[str]:
+    """The Pallas kernels this arch's layers map onto (empty for unknown
+    archs and for kernel-cell pseudo-archs — nothing to tune)."""
+    from repro.configs import get_arch
+    try:
+        cfg = get_arch(arch)
+    except KeyError:
+        return []
+    kernels: List[str] = []
+    if cfg.family != "ssm":
+        kernels.append("flash_attention")   # attention layers
+    if cfg.d_state:
+        kernels.append("ssd")               # mamba2 mixer layers
+    if cfg.lru_width:
+        kernels.append("rglru")             # griffin recurrent layers
+    return kernels
+
+
+def cases_for_record(rec: dict) -> List[space.KernelCase]:
+    """Tuning cases for one profiled RunResult dict: the cell's own
+    (batch, seq, dtype) crossed with its arch's kernel shapes, taken from
+    the reduced config — the config the measured cells actually build."""
+    from repro.configs import get_arch
+    arch, task = rec.get("arch", ""), rec.get("task", "")
+    batch, seq = int(rec.get("batch") or 0), int(rec.get("seq") or 0)
+    dtype = rec.get("dtype", "fp32")
+    if task == "kernel" or batch < 1 or seq < 1 or not kernels_for_arch(arch):
+        return []
+    cfg = get_arch(arch).reduced()
+    cases = []
+    for kernel in kernels_for_arch(arch):
+        if kernel == "flash_attention":
+            cases.append(space.make_case(
+                "flash_attention", dtype=dtype, B=batch, S=seq,
+                H=cfg.n_heads, K=cfg.n_kv_heads, D=cfg.head_dim))
+        elif kernel == "ssd":
+            cases.append(space.make_case(
+                "ssd", dtype=dtype, B=batch, S=seq, H=cfg.n_ssm_heads,
+                P=cfg.ssm_headdim, N=cfg.d_state))
+        elif kernel == "rglru":
+            cases.append(space.make_case(
+                "rglru", dtype=dtype, B=batch, S=seq, D=cfg.lru_width))
+    return cases
+
+
+def jobs_from_findings(findings: Iterable, records: Iterable[dict], *,
+                       db: Optional[TuningDB] = None) -> List[dict]:
+    """Tuning jobs for the launch-shape-sensitive findings of one detect()
+    pass.  Findings come ranked most-severe first and jobs are deduped by
+    (case, dtype) keeping the first — so each job's ``source_rule`` /
+    ``severity`` reflect the strongest finding that wants it.  ``db``
+    (default: the ambient tuning DB) sets each job's ``in_db`` flag."""
+    recs: Dict[str, dict] = {}
+    for r in records:
+        d = r.to_dict() if hasattr(r, "to_dict") else dict(r)
+        recs[d.get("name", "")] = d
+    if db is None:
+        try:
+            db = TuningDB.load()
+        except ValueError:
+            db = TuningDB()
+    jobs: List[dict] = []
+    seen = set()
+    for f in findings:
+        fd = f.to_dict() if hasattr(f, "to_dict") else dict(f)
+        if fd.get("rule") not in TUNE_RULES:
+            continue
+        rec = recs.get(fd.get("cell", ""))
+        if rec is None:
+            continue
+        for case in cases_for_record(rec):
+            key = (case.case_id, case.dtype)
+            if key in seen:
+                continue
+            seen.add(key)
+            jobs.append({
+                "kernel": case.kernel,
+                "case": case.case_id,
+                "signature": case.signature,
+                "dtype": case.dtype,
+                "source_rule": fd.get("rule"),
+                "source_cell": fd.get("cell"),
+                "severity": fd.get("severity"),
+                "in_db": db.lookup(case.kernel, case.signature,
+                                   case.dtype) is not None,
+            })
+    return jobs
+
+
+def cases_from_jobs(jobs: Sequence[dict]) -> List[space.KernelCase]:
+    """Queue jobs back into sweep input (malformed entries are skipped —
+    a hand-edited queue must not kill the sweep)."""
+    out = []
+    for j in jobs:
+        try:
+            out.append(space.parse_case(j["case"], dtype=j.get("dtype", "fp32")))
+        except (KeyError, TypeError, ValueError):
+            continue
+    return out
+
+
+def default_queue_path() -> Path:
+    """Next to the tuning DB: ``results/tuning_queue.json`` (or beside an
+    ``REPRO_TUNING_DB`` override)."""
+    from repro.tuning.db import default_path
+    return default_path().parent / "tuning_queue.json"
+
+
+def enqueue_jobs(jobs: Sequence[dict],
+                 path: Optional[Union[str, Path]] = None) -> Path:
+    """Merge jobs into the schema-tagged queue file (dedup by (case,
+    dtype), new jobs refresh old entries); returns the queue path."""
+    p = Path(path) if path is not None else default_queue_path()
+    existing = []
+    if p.exists():
+        try:
+            existing = load_queue(p)
+        except ValueError:
+            existing = []    # wrong tag: a rewrite, not a merge
+    merged: Dict = {}
+    for j in list(existing) + list(jobs):
+        if isinstance(j, dict) and "case" in j:
+            merged[(j["case"], j.get("dtype", "fp32"))] = dict(j)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    payload = {QUEUE_SCHEMA_KEY: QUEUE_SCHEMA_VERSION,
+               "jobs": list(merged.values())}
+    tmp = p.with_suffix(f".{os.getpid()}.tmp")
+    tmp.write_text(json.dumps(payload, indent=1))
+    os.replace(tmp, p)
+    return p
+
+
+def load_queue(path: Optional[Union[str, Path]] = None) -> List[dict]:
+    """The queued jobs (empty if no queue file); raises ``ValueError`` on
+    a schema-tag mismatch, like ``TuningDB.load``."""
+    p = Path(path) if path is not None else default_queue_path()
+    if not p.exists():
+        return []
+    raw = json.loads(p.read_text())
+    if not isinstance(raw, dict) or raw.get(QUEUE_SCHEMA_KEY) != QUEUE_SCHEMA_VERSION:
+        raise ValueError(f"{p} is not a tuning queue "
+                         f"(want {QUEUE_SCHEMA_KEY}={QUEUE_SCHEMA_VERSION})")
+    jobs = raw.get("jobs", [])
+    return [j for j in jobs if isinstance(j, dict)] if isinstance(jobs, list) else []

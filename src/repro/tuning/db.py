@@ -1,0 +1,160 @@
+"""The persistent tuning DB: swept launch-parameter winners served back to
+``kernels/*/ops.py`` at trace time.
+
+A plain schema-tagged JSON file (the ``trace_spec`` idiom from
+``runner/traces.py``), keyed by ``(kernel, shape-signature, dtype)``:
+
+    {"tuning_db": 1,
+     "entries": {
+       "flash_attention|Sq128,Sk128,D64|fp32": {
+         "params": {"block_q": 64, "block_k": 128},
+         "median_us": 812.4,
+         "default_params": {"block_q": 128, "block_k": 128},
+         "default_us": 903.1,
+         "case": "flash_attention@B2,S128,H4,K2,D64",
+         "candidates": 6,
+         "ts": 1754550000.0}}}
+
+The shape **signature** is the part of the case the ops layer can
+recompute at trace time from its actual inputs (``Sq.../Sk.../D...`` for
+flash attention; ``S/D`` for rglru; ``S/P/N`` for ssd) — batch and head
+counts are deliberately excluded: they scale the grid, not the per-cell
+tile economics, so one swept entry serves every batch size.
+
+Serving path (``tuned_params``): a module-level mtime-invalidated cache,
+so consulting the DB on every trace costs one ``stat()`` — and a sweep
+finishing in another process is picked up without a restart.  Misses,
+unreadable files, and wrong schema tags all serve ``None`` (the ops
+layer falls back to its built-in defaults); ``TuningDB.load`` by
+contrast raises on a wrong tag, because an explicit load of a
+non-tuning-DB file is a caller bug, not a cache miss.
+
+The default location is ``results/tuning_db.json`` under the current
+working directory, overridable with ``REPRO_TUNING_DB`` (how tests and
+the smoke gate isolate their sweeps).  Stdlib-only on purpose: the ops
+modules import this lazily inside their dispatch path and must never
+drag benchmark infrastructure into a model trace.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, Optional, Tuple, Union
+
+SCHEMA_KEY = "tuning_db"
+SCHEMA_VERSION = 1
+
+PathLike = Union[str, Path]
+
+
+def default_path() -> Path:
+    env = os.environ.get("REPRO_TUNING_DB")
+    if env:
+        return Path(env)
+    return Path.cwd() / "results" / "tuning_db.json"
+
+
+def entry_key(kernel: str, signature: str, dtype: str) -> str:
+    return f"{kernel}|{signature}|{dtype}"
+
+
+class TuningDB:
+    """Read-modify-write handle on one tuning-DB file (the sweep engine's
+    side; the trace-time consult path is the module-level ``tuned_params``)."""
+
+    def __init__(self, path: Optional[PathLike] = None):
+        self.path = Path(path) if path is not None else default_path()
+        self.entries: Dict[str, dict] = {}
+
+    @classmethod
+    def load(cls, path: Optional[PathLike] = None) -> "TuningDB":
+        """Load an existing DB (empty handle if the file doesn't exist yet);
+        raises ``ValueError`` on a schema-tag mismatch."""
+        db = cls(path)
+        if db.path.exists():
+            raw = json.loads(db.path.read_text())
+            if not isinstance(raw, dict) or raw.get(SCHEMA_KEY) != SCHEMA_VERSION:
+                raise ValueError(
+                    f"{db.path} is not a tuning DB "
+                    f"(want {SCHEMA_KEY}={SCHEMA_VERSION}, "
+                    f"got {raw.get(SCHEMA_KEY) if isinstance(raw, dict) else type(raw).__name__!r})")
+            entries = raw.get("entries", {})
+            db.entries = dict(entries) if isinstance(entries, dict) else {}
+        return db
+
+    def record(self, kernel: str, signature: str, dtype: str, *,
+               params: dict, median_us: float,
+               default_params: Optional[dict] = None,
+               default_us: float = 0.0, case: str = "",
+               candidates: int = 0) -> dict:
+        """Store one sweep winner; returns the stored entry."""
+        entry = {"params": dict(params), "median_us": float(median_us),
+                 "default_params": dict(default_params or {}),
+                 "default_us": float(default_us), "case": case,
+                 "candidates": int(candidates), "ts": time.time()}
+        self.entries[entry_key(kernel, signature, dtype)] = entry
+        return entry
+
+    def lookup(self, kernel: str, signature: str, dtype: str) -> Optional[dict]:
+        return self.entries.get(entry_key(kernel, signature, dtype))
+
+    def params(self, kernel: str, signature: str, dtype: str) -> Optional[dict]:
+        e = self.lookup(kernel, signature, dtype)
+        if not e or not isinstance(e.get("params"), dict):
+            return None
+        return dict(e["params"])
+
+    def save(self) -> Path:
+        """Atomic write (tmp + replace) so a concurrent ``tuned_params``
+        reader never sees a torn file."""
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {SCHEMA_KEY: SCHEMA_VERSION, "entries": self.entries}
+        tmp = self.path.with_suffix(f".{os.getpid()}.tmp")
+        tmp.write_text(json.dumps(payload, indent=1, sort_keys=True))
+        os.replace(tmp, self.path)
+        _CACHE.pop(str(self.path), None)   # next consult re-reads
+        return self.path
+
+
+#: path -> (mtime_ns, size, entries) — the trace-time consult cache
+_CACHE: Dict[str, Tuple[int, int, Dict[str, dict]]] = {}
+
+
+def invalidate_cache() -> None:
+    """Drop the consult cache (tests that swap ``REPRO_TUNING_DB``)."""
+    _CACHE.clear()
+
+
+def tuned_params(kernel: str, signature: str, dtype: str,
+                 path: Optional[PathLike] = None) -> Optional[dict]:
+    """The trace-time consult: the winning params dict for this
+    (kernel, signature, dtype), or ``None`` on any kind of miss —
+    no file, unreadable JSON, wrong schema tag, or no matching entry.
+    Never raises: a broken DB must degrade to the built-in defaults,
+    not break a model trace."""
+    p = Path(path) if path is not None else default_path()
+    try:
+        st = p.stat()
+    except OSError:
+        return None
+    key = str(p)
+    stamp = (st.st_mtime_ns, st.st_size)
+    cached = _CACHE.get(key)
+    if cached is None or cached[:2] != stamp:
+        try:
+            raw = json.loads(p.read_text())
+        except (OSError, ValueError):
+            return None
+        if not isinstance(raw, dict) or raw.get(SCHEMA_KEY) != SCHEMA_VERSION:
+            return None
+        entries = raw.get("entries", {})
+        if not isinstance(entries, dict):
+            entries = {}
+        cached = (stamp[0], stamp[1], entries)
+        _CACHE[key] = cached
+    e = cached[2].get(entry_key(kernel, signature, dtype))
+    if not isinstance(e, dict) or not isinstance(e.get("params"), dict):
+        return None
+    return dict(e["params"])

@@ -1,0 +1,392 @@
+"""Per-kernel launch-parameter search spaces for the autotuner.
+
+A **case** is one (kernel, shape, dtype) tuning problem; a **candidate**
+is a concrete launch-parameter assignment for it.  Both have a stable
+string encoding so they ride through the unified runner as an ordinary
+``Scenario.arch`` axis (the ``task="kernel"`` micro-bench cells):
+
+    case id        flash_attention@B2,S128,H4,K2,D64
+    candidate id   flash_attention@B2,S128,H4,K2,D64@block_q=64,block_k=128
+
+(no ``/`` — the scenario *name* uses ``/`` as its axis separator).
+
+Guarantees the sweep engine builds on:
+
+* every generated candidate is **valid for its shape**: bound-checked
+  with the same ``kernels.validate`` helper the ops layer enforces (and
+  rglru candidates are chosen from exact divisors, so the kernel's
+  sequential-grid divisibility holds without padding);
+* every candidate fits a conservative **VMEM footprint bound**
+  (``VMEM_BUDGET_BYTES``, half of a TPU core's ~16 MB so double
+  buffering fits) — no candidate can assert or OOM;
+* the ops-layer **default** parameters are always candidate #0, so a
+  sweep's winner is never slower than the default it replaces (argmin
+  over a set containing the default, ties to the default);
+* generation is deterministic: same case -> same candidate list.
+
+Candidates are *measured through the ops layer* (``bench_callable``),
+not the raw kernel: the measured cost then includes the padding /
+layout work a served config would actually trigger, and the DB
+signature is computed from exactly the shapes the ops layer sees at
+trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.kernels.validate import validate_block
+
+#: conservative per-grid-cell VMEM footprint bound (bytes): half of a TPU
+#: core's ~16 MB VMEM, leaving room for Pallas double buffering
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+#: max candidates per case (the default is always kept; the rest are the
+#: largest-tile survivors — big tiles amortise grid overhead, small ones
+#: win when the big ones spill)
+MAX_CANDIDATES = 8
+
+_DIM_RE = re.compile(r"^([A-Z][a-z]?)(\d+)$")
+_PARAM_RE = re.compile(r"^([a-z_]+)=(\d+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One (kernel, shape, dtype) tuning problem (hashable)."""
+    kernel: str
+    dims: Tuple[Tuple[str, int], ...]
+    dtype: str = "fp32"
+
+    def __post_init__(self):
+        if self.kernel not in KERNELS:
+            raise ValueError(f"unknown kernel {self.kernel!r} "
+                             f"(known: {tuple(KERNELS)})")
+        want = KERNELS[self.kernel]["dims"]
+        got = tuple(n for n, _ in self.dims)
+        if got != want:
+            raise ValueError(f"{self.kernel} case needs dims {want}, got {got}")
+        for n, v in self.dims:
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{self.kernel}: dim {n}={v!r} must be a "
+                                 f"positive int")
+
+    def dim(self, name: str) -> int:
+        return dict(self.dims)[name]
+
+    @property
+    def case_id(self) -> str:
+        dims = ",".join(f"{n}{v}" for n, v in self.dims)
+        return f"{self.kernel}@{dims}"
+
+    @property
+    def signature(self) -> str:
+        """The tuning-DB shape signature — the subset of dims the ops
+        layer can recompute from its inputs at trace time."""
+        return KERNELS[self.kernel]["signature"](dict(self.dims))
+
+
+def make_case(kernel: str, *, dtype: str = "fp32", **dims) -> KernelCase:
+    """Keyword-friendly constructor: ``make_case("rglru", B=1, S=64, D=64)``."""
+    want = KERNELS.get(kernel, {}).get("dims", ())
+    ordered = tuple((n, dims[n]) for n in want if n in dims)
+    if len(ordered) != len(dims) or len(ordered) != len(want):
+        raise ValueError(f"{kernel} case needs dims {want}, "
+                         f"got {tuple(dims)}")
+    return KernelCase(kernel=kernel, dims=ordered, dtype=dtype)
+
+
+def parse_case(case_id: str, *, dtype: str = "fp32") -> KernelCase:
+    parts = case_id.split("@")
+    if len(parts) != 2:
+        raise ValueError(f"malformed case id {case_id!r} "
+                         f"(want 'kernel@DIMS')")
+    kernel, dim_s = parts
+    dims = []
+    for tok in dim_s.split(","):
+        m = _DIM_RE.match(tok)
+        if not m:
+            raise ValueError(f"malformed dim {tok!r} in case id {case_id!r}")
+        dims.append((m.group(1), int(m.group(2))))
+    return KernelCase(kernel=kernel, dims=tuple(dims), dtype=dtype)
+
+
+def candidate_id(case: KernelCase, params: Dict[str, int]) -> str:
+    order = KERNELS[case.kernel]["params"]
+    ps = ",".join(f"{k}={params[k]}" for k in order)
+    return f"{case.case_id}@{ps}"
+
+
+def parse_candidate(cand_id: str, *,
+                    dtype: str = "fp32") -> Tuple[KernelCase, Dict[str, int]]:
+    parts = cand_id.split("@")
+    if len(parts) != 3:
+        raise ValueError(f"malformed candidate id {cand_id!r} "
+                         f"(want 'kernel@DIMS@PARAMS')")
+    case = parse_case("@".join(parts[:2]), dtype=dtype)
+    params: Dict[str, int] = {}
+    for tok in parts[2].split(","):
+        m = _PARAM_RE.match(tok)
+        if not m:
+            raise ValueError(f"malformed param {tok!r} in candidate id "
+                             f"{cand_id!r}")
+        params[m.group(1)] = int(m.group(2))
+    want = set(KERNELS[case.kernel]["params"])
+    if set(params) != want:
+        raise ValueError(f"{case.kernel} candidate needs params "
+                         f"{sorted(want)}, got {sorted(params)}")
+    return case, params
+
+
+def _pow2s(lo: int, hi: int) -> List[int]:
+    out, v = [], 1
+    while v <= hi:
+        if v >= lo:
+            out.append(v)
+        v *= 2
+    return out
+
+
+# ---- per-kernel search spaces -------------------------------------------
+
+def _fa_signature(d: Dict[str, int]) -> str:
+    return f"Sq{d['S']},Sk{d['S']},D{d['D']}"
+
+
+def _fa_defaults(d: Dict[str, int]) -> Dict[str, int]:
+    return {"block_q": min(128, d["S"]), "block_k": min(128, d["S"])}
+
+
+def _fa_vmem(d: Dict[str, int], p: Dict[str, int], esize: int) -> int:
+    bq, bk, D = p["block_q"], p["block_k"], d["D"]
+    blocks = esize * (2 * bq * D + 2 * bk * D)        # q, o, k, v tiles
+    scratch = 4 * (2 * bq + bq * D)                   # m, l, acc (fp32)
+    inter = 4 * 2 * bq * bk                           # s, p intermediates
+    return blocks + scratch + inter
+
+
+def _fa_candidates(case: KernelCase) -> List[Dict[str, int]]:
+    S = case.dim("S")
+    lo = 16 if case.dtype == "bf16" else 8            # min sublane tile
+    vals = _pow2s(min(lo, S), S)
+    out = []
+    for bq in vals:
+        for bk in vals:
+            if abs((bq.bit_length()) - (bk.bit_length())) > 1:
+                continue                              # keep pairs squarish
+            out.append({"block_q": bq, "block_k": bk})
+    return out
+
+
+def _rglru_signature(d: Dict[str, int]) -> str:
+    return f"S{d['S']},D{d['D']}"
+
+
+def _rglru_defaults(d: Dict[str, int]) -> Dict[str, int]:
+    return {"block_t": min(16, d["S"]), "block_d": min(128, d["D"])}
+
+
+def _rglru_vmem(d: Dict[str, int], p: Dict[str, int], esize: int) -> int:
+    bt, bd = p["block_t"], p["block_d"]
+    blocks = 4 * 3 * bt * bd                          # a, b, h tiles (fp32)
+    inter = 4 * 2 * bt * bt * bd                      # seg, w (L x L x lanes)
+    return blocks + inter + 4 * bd                    # + carried state
+
+
+def _rglru_candidates(case: KernelCase) -> List[Dict[str, int]]:
+    S, D = case.dim("S"), case.dim("D")
+    # exact divisors: the sequential time grid carries state, so rglru
+    # candidates never rely on ops-layer padding
+    bts = [v for v in (8, 16, 32, 64) if v <= S and S % v == 0] or [min(16, S)]
+    bds = [v for v in (32, 64, 128, 256) if v <= D and D % v == 0] or [min(128, D)]
+    return [{"block_t": bt, "block_d": bd} for bt in bts for bd in bds]
+
+
+def _ssd_signature(d: Dict[str, int]) -> str:
+    return f"S{d['S']},P{d['P']},N{d['N']}"
+
+
+def _ssd_defaults(d: Dict[str, int]) -> Dict[str, int]:
+    return {"chunk": min(128, d["S"])}
+
+
+def _ssd_vmem(d: Dict[str, int], p: Dict[str, int], esize: int) -> int:
+    L, P, N = p["chunk"], d["P"], d["N"]
+    blocks = esize * (2 * L * P + 2 * L * N + L)      # x, y, B, C, dt tiles
+    inter = 4 * 3 * L * L                             # scores, seg, w
+    return blocks + inter + 4 * N * P                 # + carried state
+
+
+def _ssd_candidates(case: KernelCase) -> List[Dict[str, int]]:
+    S = case.dim("S")
+    lo = 16 if case.dtype == "bf16" else 8
+    return [{"chunk": c} for c in (8, 16, 32, 64, 128, 256)
+            if lo <= c <= S]
+
+
+def _fa_bench(case: KernelCase, params: Dict[str, int]):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ops import flash_attention
+    d = dict(case.dims)
+    dt = jnp.bfloat16 if case.dtype == "bf16" else jnp.float32
+    B, S, H, K, D = d["B"], d["S"], d["H"], d["K"], d["D"]
+    q = jax.random.normal(jax.random.key(1), (B, S, H, D), dt)
+    k = jax.random.normal(jax.random.key(2), (B, S, K, D), dt)
+    v = jax.random.normal(jax.random.key(3), (B, S, K, D), dt)
+    bq, bk = params["block_q"], params["block_k"]
+
+    def step(q, k, v):
+        return flash_attention(q, k, v, block_q=bq, block_k=bk)
+
+    return step, (q, k, v)
+
+
+def _rglru_bench(case: KernelCase, params: Dict[str, int]):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.rglru.ops import rglru
+    d = dict(case.dims)
+    dt = jnp.bfloat16 if case.dtype == "bf16" else jnp.float32
+    B, S, D = d["B"], d["S"], d["D"]
+    x = jax.random.normal(jax.random.key(4), (B, S, D), dt)
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(5), (B, S, D)) * 2).astype(dt)
+    bt, bd = params["block_t"], params["block_d"]
+
+    def step(x, a):
+        return rglru(x, a, block_t=bt, block_d=bd)
+
+    return step, (x, a)
+
+
+def _ssd_bench(case: KernelCase, params: Dict[str, int]):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ssd.ops import ssd
+    d = dict(case.dims)
+    dt = jnp.bfloat16 if case.dtype == "bf16" else jnp.float32
+    B, S, H, P, N = d["B"], d["S"], d["H"], d["P"], d["N"]
+    x = jax.random.normal(jax.random.key(6), (B, S, H, P), dt)
+    dts = jax.nn.softplus(jax.random.normal(jax.random.key(7), (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(jax.random.key(8), (H,)) * 0.3)
+    Bm = (jax.random.normal(jax.random.key(9), (B, S, N)) * 0.3).astype(dt)
+    Cm = (jax.random.normal(jax.random.key(10), (B, S, N)) * 0.3).astype(dt)
+    chunk = params["chunk"]
+
+    def step(x, dts, A, Bm, Cm):
+        return ssd(x, dts, A, Bm, Cm, chunk=chunk)
+
+    return step, (x, dts, A, Bm, Cm)
+
+
+#: the kernel registry: dims order, tunable params, signature/default/
+#: candidate/VMEM functions, and the ops-level bench builder
+KERNELS: Dict[str, Dict] = {
+    "flash_attention": {
+        "dims": ("B", "S", "H", "K", "D"),
+        "params": ("block_q", "block_k"),
+        # bound constraints: the kernel masks the tail, blocks must fit
+        "validate": lambda d, p: (
+            validate_block("flash_attention", "S", d["S"], "block_q", p["block_q"]),
+            validate_block("flash_attention", "S", d["S"], "block_k", p["block_k"])),
+        "signature": _fa_signature,
+        "defaults": _fa_defaults,
+        "candidates": _fa_candidates,
+        "vmem": _fa_vmem,
+        "bench": _fa_bench,
+    },
+    "rglru": {
+        "dims": ("B", "S", "D"),
+        "params": ("block_t", "block_d"),
+        "validate": lambda d, p: (
+            validate_block("rglru", "S", d["S"], "block_t", p["block_t"]),
+            validate_block("rglru", "D", d["D"], "block_d", p["block_d"])),
+        "signature": _rglru_signature,
+        "defaults": _rglru_defaults,
+        "candidates": _rglru_candidates,
+        "vmem": _rglru_vmem,
+        "bench": _rglru_bench,
+    },
+    "ssd": {
+        "dims": ("B", "S", "H", "P", "N"),
+        "params": ("chunk",),
+        "validate": lambda d, p: (
+            validate_block("ssd", "S", d["S"], "chunk", p["chunk"]),),
+        "signature": _ssd_signature,
+        "defaults": _ssd_defaults,
+        "candidates": _ssd_candidates,
+        "vmem": _ssd_vmem,
+        "bench": _ssd_bench,
+    },
+}
+
+
+def default_params(case: KernelCase) -> Dict[str, int]:
+    """The ops-layer fallback parameters for this case — what a DB miss
+    serves today, and always candidate #0 of the sweep."""
+    return KERNELS[case.kernel]["defaults"](dict(case.dims))
+
+
+def vmem_bytes(case: KernelCase, params: Dict[str, int]) -> int:
+    """Conservative per-grid-cell VMEM footprint estimate (bytes)."""
+    esize = 2 if case.dtype == "bf16" else 4
+    return KERNELS[case.kernel]["vmem"](dict(case.dims), params, esize)
+
+
+def candidates(case: KernelCase,
+               max_candidates: Optional[int] = None) -> List[Dict[str, int]]:
+    """The deterministic candidate list for a case: the ops default first,
+    then the largest-tile valid candidates under the VMEM budget, capped
+    at ``max_candidates`` (default ``MAX_CANDIDATES``).  Every returned
+    candidate passes the shared ``kernels.validate`` bound checks."""
+    spec = KERNELS[case.kernel]
+    dims = dict(case.dims)
+    cap = MAX_CANDIDATES if max_candidates is None else max(1, max_candidates)
+    default = default_params(case)
+    raw = [default] + spec["candidates"](case)
+    seen, out = set(), []
+    for p in raw:
+        key = tuple(sorted(p.items()))
+        if key in seen:
+            continue
+        seen.add(key)
+        if vmem_bytes(case, p) > VMEM_BUDGET_BYTES:
+            continue
+        try:
+            spec["validate"](dims, p)
+        except ValueError:
+            continue
+        out.append(p)
+    if not out or out[0] != default:
+        # the default must survive filtering: it is what a miss serves, so
+        # it must be measured (and it is what today's code runs, so it
+        # cannot be over budget in any configuration we ship)
+        out = [default] + out
+    head, tail = out[0], out[1:]
+    tail.sort(key=lambda p: (-_tile_size(p), candidate_id(case, p)))
+    return [head] + tail[:cap - 1]
+
+
+def _tile_size(params: Dict[str, int]) -> int:
+    n = 1
+    for v in params.values():
+        n *= v
+    return n
+
+
+def bench_callable(case: KernelCase,
+                   params: Dict[str, int]) -> Tuple[Callable, Tuple]:
+    """(step_fn, args) measuring this candidate through the ops layer
+    (includes padding/layout cost; deterministic inputs per case)."""
+    KERNELS[case.kernel]["validate"](dict(case.dims), params)
+    return KERNELS[case.kernel]["bench"](case, params)
+
+
+def result_extra(case: KernelCase, params: Dict[str, int]) -> Dict:
+    """The well-known ``tuning_*`` extras for a kernel cell's RunResult
+    (documented in ``runner/results.py``)."""
+    return {"tuning_kernel": case.kernel,
+            "tuning_case": case.case_id,
+            "tuning_signature": case.signature,
+            "tuning_params": dict(params),
+            "tuning_default": params == default_params(case)}

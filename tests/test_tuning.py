@@ -1,0 +1,354 @@
+"""Autotuning subsystem: DB round-trip + schema tagging, deterministic
+valid search spaces, kernel cells through the runner, sweep -> DB -> ops
+serving, candidate numerics vs the ref oracles, and the detector bridge."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.validate import nearest_valid_block, resolve_interpret, validate_block
+from repro.models.ssm import ssd_sequential
+from repro.runner import BenchmarkRunner, Scenario
+from repro.tuning import db as tdb
+from repro.tuning import space
+from repro.tuning.bridge import (cases_for_record, cases_from_jobs, enqueue_jobs,
+                                 jobs_from_findings, kernels_for_arch, load_queue)
+from repro.tuning.db import TuningDB, tuned_params
+from repro.tuning.sweep import run_sweep, sweep_matrix
+
+
+@pytest.fixture
+def tmp_db(tmp_path, monkeypatch):
+    """Isolate the ambient tuning DB (the path ops.py consults)."""
+    path = tmp_path / "tuning_db.json"
+    monkeypatch.setenv("REPRO_TUNING_DB", str(path))
+    tdb.invalidate_cache()
+    yield path
+    tdb.invalidate_cache()
+
+
+# ---- DB ------------------------------------------------------------------
+
+def test_db_roundtrip(tmp_db):
+    db = TuningDB.load(tmp_db)
+    db.record("flash_attention", "Sq64,Sk64,D32", "fp32",
+              params={"block_q": 32, "block_k": 64}, median_us=12.5,
+              default_params={"block_q": 64, "block_k": 64}, default_us=20.0,
+              case="flash_attention@B1,S64,H2,K2,D32", candidates=4)
+    db.save()
+    back = TuningDB.load(tmp_db)
+    entry = back.lookup("flash_attention", "Sq64,Sk64,D32", "fp32")
+    assert entry["params"] == {"block_q": 32, "block_k": 64}
+    assert entry["default_us"] == 20.0
+    assert back.params("flash_attention", "Sq64,Sk64,D32", "fp32") == \
+        {"block_q": 32, "block_k": 64}
+    assert back.lookup("flash_attention", "Sq64,Sk64,D32", "bf16") is None
+
+
+def test_db_schema_tag_rejected(tmp_db):
+    tmp_db.write_text(json.dumps({"trace_spec": 1, "entries": {}}))
+    with pytest.raises(ValueError, match="tuning_db"):
+        TuningDB.load(tmp_db)
+    # the trace-time consult degrades to a miss instead of raising
+    assert tuned_params("flash_attention", "Sq64,Sk64,D32", "fp32") is None
+
+
+def test_db_miss_and_broken_file_serve_none(tmp_db):
+    assert tuned_params("rglru", "S64,D64", "fp32") is None   # no file
+    tmp_db.write_text("{not json")
+    assert tuned_params("rglru", "S64,D64", "fp32") is None   # unreadable
+
+
+def test_db_consult_picks_up_rewrite(tmp_db):
+    db = TuningDB(tmp_db)
+    db.record("rglru", "S64,D64", "fp32", params={"block_t": 16, "block_d": 64},
+              median_us=1.0)
+    db.save()
+    assert tuned_params("rglru", "S64,D64", "fp32") == {"block_t": 16, "block_d": 64}
+    db.record("rglru", "S64,D64", "fp32", params={"block_t": 32, "block_d": 64},
+              median_us=0.5)
+    db.save()
+    assert tuned_params("rglru", "S64,D64", "fp32") == {"block_t": 32, "block_d": 64}
+
+
+# ---- search space --------------------------------------------------------
+
+def test_case_and_candidate_ids_roundtrip():
+    case = space.make_case("flash_attention", B=2, S=128, H=4, K=2, D=64)
+    assert case.case_id == "flash_attention@B2,S128,H4,K2,D64"
+    assert case.signature == "Sq128,Sk128,D64"
+    assert space.parse_case(case.case_id) == case
+    params = {"block_q": 64, "block_k": 128}
+    cid = space.candidate_id(case, params)
+    back_case, back_params = space.parse_candidate(cid)
+    assert (back_case, back_params) == (case, params)
+    for bad in ("flash_attention@B2", "nope@B1,S64@x=1",
+                "flash_attention@B2,S128,H4,K2,D64@block_q=64"):
+        with pytest.raises(ValueError):
+            space.parse_candidate(bad)
+
+
+@pytest.mark.parametrize("case", [
+    space.make_case("flash_attention", B=1, S=64, H=2, K=2, D=32),
+    space.make_case("flash_attention", B=2, S=96, H=4, K=2, D=64, dtype="bf16"),
+    space.make_case("rglru", B=1, S=48, D=96),
+    space.make_case("rglru", B=2, S=128, D=128),
+    space.make_case("ssd", B=1, S=64, H=2, P=16, N=16),
+])
+def test_candidates_deterministic_and_valid(case):
+    cands = space.candidates(case)
+    assert cands == space.candidates(case)            # deterministic
+    assert cands[0] == space.default_params(case)     # default is #0
+    assert len(cands) <= space.MAX_CANDIDATES
+    assert len({space.candidate_id(case, p) for p in cands}) == len(cands)
+    spec = space.KERNELS[case.kernel]
+    for p in cands:
+        spec["validate"](dict(case.dims), p)          # no candidate asserts
+        assert space.vmem_bytes(case, p) <= space.VMEM_BUDGET_BYTES
+
+
+def test_candidates_cap():
+    case = space.make_case("flash_attention", B=1, S=256, H=2, K=2, D=64)
+    assert len(space.candidates(case, max_candidates=3)) == 3
+    assert space.candidates(case, max_candidates=3)[0] == space.default_params(case)
+
+
+# ---- shared block validation (the satellite) -----------------------------
+
+def test_nearest_valid_block():
+    assert nearest_valid_block(48, 32, divides=True) == 24
+    assert nearest_valid_block(64, 256) == 64
+    assert nearest_valid_block(64, 0) == 1
+
+
+def test_validate_block_messages():
+    with pytest.raises(ValueError, match=r"rglru: block_t=32 does not divide "
+                                         r"S=48 \(nearest valid: 24\)"):
+        validate_block("rglru", "S", 48, "block_t", 32, divides=True)
+    with pytest.raises(ValueError, match=r"flash_attention: block_q=256 is "
+                                         r"outside \[1, Sq=64\]"):
+        validate_block("flash_attention", "Sq", 64, "block_q", 256)
+    with pytest.raises(ValueError, match="must be an int"):
+        validate_block("ssd", "S", 64, "chunk", 16.0)
+
+
+def test_kernel_layers_reject_invalid_blocks():
+    # ops layer: out-of-bound blocks raise (never clamp); non-divisors
+    # are legal there — the ops layer pads, the kernel enforces division
+    q = jax.random.normal(jax.random.key(1), (1, 64, 2, 32))
+    with pytest.raises(ValueError, match="flash_attention: block_q"):
+        fops.flash_attention(q, q[:, :, :2], q[:, :, :2], block_q=256)
+    x = jax.random.normal(jax.random.key(2), (1, 48, 64))
+    a = jax.nn.sigmoid(x)
+    with pytest.raises(ValueError, match="rglru: block_t"):
+        rglru(x, a, block_t=64)      # 64 > S=48: outside the bound
+    xs = jax.random.normal(jax.random.key(3), (1, 48, 2, 16))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(4), (1, 48, 2)))
+    A = -jnp.ones((2,))
+    Bm = jax.random.normal(jax.random.key(5), (1, 48, 16))
+    with pytest.raises(ValueError, match="ssd: chunk"):
+        ssd(xs, dt, A, Bm, Bm, chunk=64)   # 64 > S=48
+    # kernel layer: the old silent `assert S % block == 0` is now a clear
+    # divisibility error naming the kernel and the nearest valid block
+    from repro.kernels.rglru.kernel import rglru_scan_kernel
+    with pytest.raises(ValueError, match=r"rglru: block_t=32 does not divide"):
+        rglru_scan_kernel(a, x, block_t=32, block_d=64)
+
+
+def test_resolve_interpret():
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # auto-detection: interpret unless we are actually on a TPU backend
+    assert resolve_interpret(None) is (jax.default_backend() != "tpu")
+
+
+# ---- kernel cells through the runner -------------------------------------
+
+def test_kernel_scenario_validation():
+    case = space.make_case("flash_attention", B=1, S=64, H=2, K=2, D=32)
+    cid = space.candidate_id(case, space.default_params(case))
+    sc = Scenario(arch=cid, task="kernel", batch=1, seq=64, mode="jit")
+    assert sc.name.endswith("/kernel/b1/s64/fp32/jit")
+    assert sc.build_key() == ("kernel", cid, "fp32")
+    with pytest.raises(ValueError, match="kernel cells"):
+        Scenario(arch=cid, task="kernel", mode="eager")
+    with pytest.raises(ValueError, match="candidate-id"):
+        Scenario(arch="gemma-2b", task="kernel", mode="jit")
+
+
+def test_sweep_matrix_one_cell_per_candidate():
+    cases = [space.make_case("flash_attention", B=1, S=64, H=2, K=2, D=32),
+             space.make_case("rglru", B=2, S=32, D=64)]
+    matrix = sweep_matrix(cases, max_candidates=2)
+    names = [s.name for s in matrix]
+    assert len(names) == 4 and len(set(names)) == 4
+    assert all(s.task == "kernel" and s.mode == "jit" for s in matrix)
+    # the exact-name filters keep each candidate on its own case's axes
+    assert sum(1 for n in names if "/b1/s64/" in n) == 2
+    assert sum(1 for n in names if "/b2/s32/" in n) == 2
+
+
+def test_kernel_cell_run_result(tmp_db):
+    case = space.make_case("rglru", B=1, S=32, D=64)
+    cid = space.candidate_id(case, space.default_params(case))
+    runner = BenchmarkRunner(runs=1, warmup=0, compile_warmup=0)
+    rr = runner.run(Scenario(arch=cid, task="kernel", batch=1, seq=32,
+                             mode="jit"), record=False)
+    assert rr.status == "ok", rr.error
+    assert rr.extra["tuning_kernel"] == "rglru"
+    assert rr.extra["tuning_case"] == case.case_id
+    assert rr.extra["tuning_signature"] == "S32,D64"
+    assert rr.extra["tuning_default"] is True
+    assert rr.median_us > 0
+
+
+def test_sweep_records_winner_and_ops_serve_it(tmp_db, monkeypatch):
+    case = space.make_case("flash_attention", B=1, S=64, H=2, K=2, D=32)
+    runner = BenchmarkRunner(runs=1, warmup=0, compile_warmup=0)
+    summary = run_sweep([case], runner, max_candidates=2)
+    row = summary["cases"][0]
+    assert row["status"] == "ok"
+    assert summary["recorded"] == 1 and tmp_db.exists()
+    assert row["ratio"] >= 1.0        # default is a candidate; argmin wins
+    assert tuned_params("flash_attention", case.signature, "fp32") == row["winner"]
+
+    served = {}
+    orig = fops.flash_attention_bh
+    def spy(*a, **kw):
+        served.update({k: kw[k] for k in ("block_q", "block_k")})
+        return orig(*a, **kw)
+    monkeypatch.setattr(fops, "flash_attention_bh", spy)
+    q = jax.random.normal(jax.random.key(1), (1, 64, 2, 32))
+    k = jax.random.normal(jax.random.key(2), (1, 64, 2, 32))
+    v = jax.random.normal(jax.random.key(3), (1, 64, 2, 32))
+    fops.flash_attention(q, k, v)                  # no explicit blocks
+    assert served == row["winner"]
+    served.clear()
+    fops.flash_attention(q, k, v, block_q=16, block_k=16)
+    assert served == {"block_q": 16, "block_k": 16}   # explicit wins over DB
+
+
+def test_stale_db_entry_falls_back_to_defaults(tmp_db):
+    db = TuningDB(tmp_db)
+    # a winner swept for some OTHER shape: invalid for S=64
+    db.record("flash_attention", "Sq64,Sk64,D32", "fp32",
+              params={"block_q": 256, "block_k": 256}, median_us=1.0)
+    db.save()
+    q = jax.random.normal(jax.random.key(1), (1, 64, 2, 32))
+    out = fops.flash_attention(q, q, q)            # must not raise
+    assert out.shape == q.shape
+
+
+# ---- candidate numerics vs the ref oracles -------------------------------
+
+def _fa_ref(q, k, v, **kw):
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, k.shape[1], D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, k.shape[1], D)
+    return attention_ref(qf, kf, vf, **kw).reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("dtype", ["fp32", "bf16"])
+def test_flash_candidates_match_ref(dtype):
+    case = space.make_case("flash_attention", B=1, S=64, H=2, K=2, D=32,
+                           dtype=dtype)
+    dt = jnp.bfloat16 if dtype == "bf16" else jnp.float32
+    q = jax.random.normal(jax.random.key(1), (1, 64, 2, 32), dt)
+    k = jax.random.normal(jax.random.key(2), (1, 64, 2, 32), dt)
+    v = jax.random.normal(jax.random.key(3), (1, 64, 2, 32), dt)
+    ref = _fa_ref(q, k, v)
+    tol = 2e-2 if dtype == "bf16" else 2e-5
+    for p in space.candidates(case, max_candidates=4):
+        out = fops.flash_attention(q, k, v, **p)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol, err_msg=str(p))
+
+
+def test_rglru_candidates_match_ref():
+    case = space.make_case("rglru", B=1, S=64, D=64)
+    x = jax.random.normal(jax.random.key(9), (1, 64, 64))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(10), (1, 64, 64)) * 2)
+    hr = rglru_ref(a, jnp.sqrt(1 - a ** 2) * x)
+    for p in space.candidates(case, max_candidates=4):
+        hk = rglru(x, a, **p)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   atol=2e-5, rtol=2e-5, err_msg=str(p))
+
+
+def test_ssd_candidates_match_ref():
+    case = space.make_case("ssd", B=1, S=64, H=2, P=16, N=16)
+    x = jax.random.normal(jax.random.key(4), (1, 64, 2, 16))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(5), (1, 64, 2)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(6), (2,)) * 0.3)
+    Bm = jax.random.normal(jax.random.key(7), (1, 64, 16)) * 0.3
+    Cm = jax.random.normal(jax.random.key(8), (1, 64, 16)) * 0.3
+    yr, _ = ssd_sequential(x, dt, A, Bm, Cm)
+    for p in space.candidates(case, max_candidates=4):
+        yk = ssd(x, dt, A, Bm, Cm, **p)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   atol=5e-5, rtol=5e-5, err_msg=str(p))
+
+
+# ---- detector bridge -----------------------------------------------------
+
+def test_kernels_for_arch():
+    assert kernels_for_arch("gemma-2b") == ["flash_attention"]
+    assert kernels_for_arch("mamba2-2.7b") == ["ssd"]
+    assert kernels_for_arch("recurrentgemma-9b") == ["flash_attention", "rglru"]
+    assert kernels_for_arch("no-such-arch") == []
+
+
+def test_cases_for_record_skips_kernel_cells_and_unknown():
+    assert cases_for_record({"arch": "gemma-2b", "task": "kernel",
+                             "batch": 1, "seq": 64}) == []
+    assert cases_for_record({"arch": "no-such-arch", "task": "train",
+                             "batch": 1, "seq": 64}) == []
+    cases = cases_for_record({"arch": "recurrentgemma-9b", "task": "train",
+                              "batch": 2, "seq": 64, "dtype": "fp32"})
+    assert [c.kernel for c in cases] == ["flash_attention", "rglru"]
+    assert all(c.dim("B") == 2 and c.dim("S") == 64 for c in cases)
+
+
+def test_jobs_from_findings_dedup_and_queue(tmp_db, tmp_path):
+    recs = [{"name": "gemma-2b/train/b1/s32/fp32/jit", "arch": "gemma-2b",
+             "task": "train", "batch": 1, "seq": 32, "dtype": "fp32"}]
+    findings = [
+        {"rule": "low_util", "cell": recs[0]["name"], "severity": "warn"},
+        {"rule": "data_movement_bound", "cell": recs[0]["name"],
+         "severity": "info"},                       # same case: deduped
+        {"rule": "dispatch_bound", "cell": recs[0]["name"],
+         "severity": "crit"},                       # not a tune rule
+    ]
+    jobs = jobs_from_findings(findings, recs)
+    assert len(jobs) == 1
+    job = jobs[0]
+    assert job["kernel"] == "flash_attention"
+    assert job["source_rule"] == "low_util"         # first (strongest) kept
+    assert job["in_db"] is False
+
+    qp = tmp_path / "queue.json"
+    enqueue_jobs(jobs, qp)
+    enqueue_jobs(jobs, qp)                          # merge is idempotent
+    back = load_queue(qp)
+    assert len(back) == 1 and back[0]["case"] == job["case"]
+    cases = cases_from_jobs(back + [{"case": "bogus"}, {"nope": 1}])
+    assert len(cases) == 1 and cases[0].kernel == "flash_attention"
+
+
+def test_load_queue_schema_tag_rejected(tmp_path):
+    qp = tmp_path / "queue.json"
+    qp.write_text(json.dumps({"tuning_db": 1, "jobs": []}))
+    with pytest.raises(ValueError, match="tuning_queue"):
+        load_queue(qp)
+    assert load_queue(tmp_path / "missing.json") == []
