@@ -1,0 +1,100 @@
+"""Latency-vs-offered-load curve: ``task="loadgen"`` cells through the
+unified runner, swept over the ``loads`` axis, post-processed into the
+saturation knee.
+
+Each cell replays the same mixed-prompt-length trace against the serve
+engine with its virtual arrival clock scaled by the offered load; TTFT
+and per-token p99 climb as the queue saturates while tok/s flattens —
+``repro.runner.loadgen.find_knee`` marks the last load that still bought
+throughput.  Sharded loadgen (``--jobs N`` / ``cluster=``) comes free
+from ordinary matrix dispatch; add ``splits`` to fan one trace across
+workers.
+
+Rows + knee land in ``results/loadgen_curve.json``, and a summary record
+carrying ``knee_load`` / ``knee_tok_s`` in its ``extra`` is appended to
+the shared ResultStore so CI baselines can track the knee like any other
+scalar.
+
+    PYTHONPATH=src python -m benchmarks.loadgen_curve [--fast] [--jobs N]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit, make_runner, results_path
+from repro.runner.loadgen import find_knee
+from repro.runner.results import RunResult
+from repro.runner.scenario import ScenarioMatrix
+
+LOADS_FULL = (0.5, 1.0, 2.0, 4.0, 8.0)
+LOADS_FAST = (0.5, 1.0, 2.0, 4.0)
+
+
+def scenario_matrices(fast: bool = False):
+    """The matrices this table executes (``benchmarks.run --list`` hook)."""
+    requests, prompt = (8, 8) if fast else (16, 16)
+    return [ScenarioMatrix(archs=["gemma-2b"], tasks=("loadgen",),
+                           batches=(requests,), seqs=(prompt,), slots=(2,),
+                           traces=("bursty+bimodal",),
+                           loads=LOADS_FAST if fast else LOADS_FULL)]
+
+
+def main(fast: bool = False, runner=None) -> None:
+    runner = runner or make_runner()
+    [matrix] = scenario_matrices(fast)
+    rows = []
+    for rr in runner.run_matrix(matrix):
+        if rr.status != "ok":
+            emit(f"loadgen/{rr.name}", 0.0,
+                 f"status={rr.status};error={(rr.error or '')[:60]}")
+            continue
+        ex = rr.extra
+        emit(f"loadgen/{rr.name}", rr.median_us,
+             f"load={ex['offered_load']:g};tok_per_s={ex['tok_per_s']:.1f};"
+             f"ttft_p99={ex['ttft_p99']:.0f};tok_lat_p99={ex['tok_lat_p99']:.0f};"
+             f"qmax={ex['queue_depth_max']}")
+        rows.append({"name": rr.name, "arch": rr.arch, "slots": ex["slots"],
+                     "trace": ex["trace"], "load": ex["offered_load"],
+                     "split": ex.get("split", ""), "requests": rr.runs,
+                     "tok_per_s": ex["tok_per_s"],
+                     "decode_steps": ex["decode_steps"],
+                     "queue_depth_mean": ex["queue_depth_mean"],
+                     "queue_depth_max": ex["queue_depth_max"],
+                     "prompt_len_p50": ex.get("prompt_len_p50"),
+                     "prompt_len_p95": ex.get("prompt_len_p95"),
+                     "tokens_digest": ex["tokens_digest"],
+                     **{k: ex[k] for k in ("ttft_p50", "ttft_p95", "ttft_p99",
+                                           "tok_lat_p50", "tok_lat_p95",
+                                           "tok_lat_p99") if k in ex}})
+    knee = find_knee(rows)
+    emit("loadgen/knee", knee["knee_tok_s"], f"knee_load={knee['knee_load']:g}")
+    if runner.store is not None and rows:
+        # the curve's summary as an ordinary record: knee metrics under
+        # extra, latest-wins like any emitted scalar (see results.py docs)
+        runner.store.append(RunResult(
+            name="gemma-2b/loadgen_curve", bench="gemma-2b/loadgen",
+            arch="gemma-2b", task="loadgen", batch=rows[0]["requests"],
+            seq=0, dtype="fp32", mode="jit_donated", status="ok",
+            median_us=0.0, mean_us=0.0, p10_us=0.0, p90_us=0.0,
+            compile_us=0.0, runs=len(rows), wall_s=0.0, ts=time.time(),
+            extra={"knee_load": knee["knee_load"],
+                   "knee_tok_s": knee["knee_tok_s"],
+                   "loads": [r["load"] for r in rows],
+                   "curve_tok_per_s": [r["tok_per_s"] for r in rows]}))
+    with open(results_path("loadgen_curve.json"), "w") as f:
+        json.dump({"fast": fast, "rows": rows, "knee": knee}, f, indent=1)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="shard the loadgen sweep across N workers")
+    args = ap.parse_args()
+    r = make_runner(jobs=args.jobs)
+    try:
+        main(fast=args.fast, runner=r)
+    finally:
+        r.close()

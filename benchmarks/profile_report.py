@@ -10,6 +10,12 @@ a human table on stderr-safe comment lines, and the full JSON (records'
 prof summaries + findings + tallies) in ``results/profile_report.json``.
 
     PYTHONPATH=src python -m benchmarks.profile_report [--fast] [--jobs N]
+
+``--drain-queue`` closes the detect -> tune loop from the other side:
+instead of profiling, it turns the queued jobs a previous report wrote
+to ``results/tuning_queue.json`` into an actual launch-parameter sweep
+(``repro.tuning.run_sweep``) and empties the queue — winners land in the
+tuning DB, where the ops layer serves them on the next trace.
 """
 from __future__ import annotations
 
@@ -18,7 +24,8 @@ import json
 from benchmarks.common import emit, make_runner, results_path
 from repro.profiler import build_report, detect, format_table
 from repro.runner import ScenarioMatrix
-from repro.tuning import enqueue_jobs, jobs_from_findings
+from repro.tuning import (cases_from_jobs, enqueue_jobs, jobs_from_findings,
+                          load_queue, run_sweep)
 
 STEP_ARCHS = ["gemma-2b", "mamba2-2.7b", "recurrentgemma-9b", "mixtral-8x7b"]
 
@@ -50,6 +57,43 @@ def _prof_summary(rec: dict) -> dict:
             "median_us": rec.get("median_us"),
             "compile_us": rec.get("compile_us"),
             "shard": extra.get("shard"), **keep}
+
+
+def drain_queue(runner=None, queue_path=None) -> dict:
+    """Sweep every queued tuning job and empty the queue.
+
+    The queue (``results/tuning_queue.json``) holds jobs a previous
+    report's detectors enqueued; this turns them into kernel micro-bench
+    cells via the existing bridge (``cases_from_jobs`` -> ``run_sweep``)
+    and records the winners in the tuning DB.  The queue is emptied
+    afterwards — malformed jobs are dropped with it (re-running a
+    detector re-enqueues anything still relevant)."""
+    queue_path = queue_path or results_path("tuning_queue.json")
+    jobs = load_queue(queue_path)
+    cases = cases_from_jobs(jobs)
+    emit("profile_report/drain_queue", 0.0,
+         f"jobs={len(jobs)};cases={len(cases)};queue={queue_path}")
+    if not cases:
+        print(f"# tuning queue empty ({queue_path}); nothing to drain")
+        return {"jobs": len(jobs), "cases": 0}
+    runner = runner or make_runner()
+    summary = run_sweep(cases, runner)
+    for c in summary["cases"]:
+        ratio = c.get("ratio")
+        note = f"status={c['status']}"
+        if ratio:
+            note += f";ratio={ratio:.3f}"
+        emit(f"profile_report/drained/{c['case']}",
+             c.get("winner_us") or 0.0, note)
+    # all jobs were attempted: rewrite the queue empty (enqueue_jobs
+    # merges, so write the schema-tagged empty payload directly)
+    from repro.tuning.bridge import QUEUE_SCHEMA_KEY, QUEUE_SCHEMA_VERSION
+    with open(queue_path, "w") as f:
+        json.dump({QUEUE_SCHEMA_KEY: QUEUE_SCHEMA_VERSION, "jobs": []}, f)
+    print(f"# drained {len(cases)} tuning jobs -> {summary['db_path']} "
+          f"({summary['recorded']} winners recorded)")
+    return {"jobs": len(jobs), "cases": len(cases),
+            "recorded": summary["recorded"], "db": summary["db_path"]}
 
 
 def main(fast: bool = False, runner=None) -> None:
@@ -94,9 +138,15 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--jobs", type=int, default=0,
                     help="shard the profiled sweep across N workers")
+    ap.add_argument("--drain-queue", action="store_true",
+                    help="sweep results/tuning_queue.json jobs instead of "
+                         "profiling, then empty the queue")
     args = ap.parse_args()
     r = make_runner(jobs=args.jobs)
     try:
-        main(fast=args.fast, runner=r)
+        if args.drain_queue:
+            drain_queue(runner=r)
+        else:
+            main(fast=args.fast, runner=r)
     finally:
         r.close()

@@ -64,9 +64,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (batchsize, fig5_hardware, fig12_breakdown,
-                            fig34_compilers, profile_report, roofline,
-                            runner_bench, serve_latency, table1_suite,
-                            table45_ci)
+                            fig34_compilers, loadgen_curve, profile_report,
+                            roofline, runner_bench, serve_latency,
+                            table1_suite, table45_ci)
     from benchmarks.common import make_runner
     runner = make_runner(isolate=args.isolate, jobs=args.jobs,
                          cluster=args.cluster, profile=args.profile)
@@ -82,6 +82,7 @@ def main(argv=None) -> int:
         "batchsize": batchsize.main,               # §2.2 batch-size search
         "roofline": roofline.main,                 # §Roofline deliverable
         "serve_latency": serve_latency.main,       # serving-latency table
+        "loadgen_curve": loadgen_curve.main,       # TTFT/p99 vs offered load
         "profile_report": profile_report.main,     # measured inefficiency findings
         "runner_bench": runner_bench.main,         # runner reuse speedup
     }

@@ -38,6 +38,41 @@ assert len(rr.extra["tokens"]) == 4
 print("serve smoke OK")
 EOF
 
+echo "== mixed-prompt serve + capture->replay round-trip =="
+python - <<'EOF'
+import json
+import os
+import tempfile
+
+from repro.runner import BenchmarkRunner, Scenario
+
+# a bimodal trace: 4 requests spanning 2 distinct prompt lengths in one
+# continuous-batching replay (per-slot KV positions)
+sc = Scenario(arch="gemma-2b", task="serve", batch=4, seq=8, slots=2,
+              trace="bursty+bimodal")
+runner = BenchmarkRunner()
+rr = runner.run(sc, record=False)
+assert rr.status == "ok", rr.error
+cap = rr.extra["capture"]
+lens = set(cap["prompt_lens"])
+print(f"  {rr.name}: {rr.status} prompt_lens={sorted(lens)}")
+assert len(lens) >= 2, f"want >= 2 distinct prompt lengths, got {lens}"
+assert len(cap["prompt_lens"]) == 4
+
+# round-trip: replay the captured spec via trace="file:..." and demand
+# byte-identical tokens
+path = os.path.join(tempfile.mkdtemp(prefix="smoke_capture_"), "cap.json")
+with open(path, "w") as f:
+    json.dump({"trace_spec": 1, **cap}, f)
+rr2 = runner.run(Scenario(arch="gemma-2b", task="serve", batch=4, seq=8,
+                          slots=2, trace=f"file:{path}"), record=False)
+assert rr2.status == "ok", rr2.error
+assert rr2.extra["tokens_digest"] == rr.extra["tokens_digest"], \
+    (rr.extra["tokens_digest"], rr2.extra["tokens_digest"])
+print(f"  capture replay digest match: {rr2.extra['tokens_digest'][:16]}")
+print("capture smoke OK")
+EOF
+
 echo "== profiled cell: measured timeline + attribution through the runner =="
 python - <<'EOF'
 from repro.runner import BenchmarkRunner, Scenario

@@ -15,9 +15,13 @@ Layering (ISSUE 3):
   the train/infer cells of the same arch — the engine never builds
   models itself.
 * Request traces come from ``repro.runner.traces``: deterministic load
-  profiles (uniform / bursty / mixed) whose arrivals are expressed in
-  decode-step *virtual time*, so generated tokens are a pure function of
-  (trace spec, params) — identical serially and under sharded dispatch.
+  profiles (uniform / bursty / mixed arrivals, optionally crossed with a
+  prompt-length profile as ``"bursty+bimodal"``) whose arrivals are
+  expressed in decode-step *virtual time*, so generated tokens are a pure
+  function of (trace spec, params) — identical serially and under sharded
+  dispatch.  Per-slot position vectors in the KV cache let one decode
+  batch mix prompt lengths; ``capture()`` turns a served trace back into
+  a replayable spec.
 * Latency distributions (TTFT and per-token p50/p95/p99) are produced by
   ``summarize_metrics`` on the engine's raw per-request timestamps,
   using the shared ``repro.runner.latency`` percentile helper.
@@ -49,7 +53,8 @@ import numpy as np
 
 from repro.runner.latency import latency_summary
 from repro.runner.traces import (Request, TraceSpec, cache_len_bound,
-                                 generate, tokens_by_rid, tokens_digest)
+                                 capture_spec, generate, save_spec,
+                                 tokens_by_rid, tokens_digest)
 
 
 class ServeEngine:
@@ -70,6 +75,9 @@ class ServeEngine:
         self.params = built.params
         self.slots = slots
         self.max_len = max_len
+        # vlm prefill writes n_prefix patch tokens ahead of the prompt, so
+        # a slot's cache position starts past the prefix after admission
+        self._prefix = built.cfg.n_prefix if built.cfg.family == "vlm" else 0
         dargs = (2,) if donate else ()
         self._decode = jax.jit(self.model.decode_step, donate_argnums=dargs)
         self._prefill_cache = jax.jit(
@@ -79,13 +87,12 @@ class ServeEngine:
     def _reset(self) -> None:
         self.cache = self.model.init_cache(self.slots, self.max_len)
         self.slot_req: List[Optional[Request]] = [None] * self.slots
+        # host-side mirror of the per-layer "len" vectors: admission sets a
+        # row to prefix + prompt_len, every decode step advances all rows.
+        # Guarded in run(): an *active* row overflowing max_len would have
+        # its KV write clamped to the cache edge, corrupting attention.
         self.slot_pos = np.zeros(self.slots, np.int32)
         self.steps = 0
-        # upper bound on the shared lockstep cache position: longest prompt
-        # admitted so far + every decode step of the replay (the counter
-        # never rewinds on slot refill).  Guarded in run(): overflowing
-        # max_len would silently clamp KV writes, corrupting attention.
-        self._pos_bound = 0
 
     def _admit(self, req: Request, slot: int) -> int:
         """Prefill a single request into ``slot``; returns first token."""
@@ -97,15 +104,13 @@ class ServeEngine:
         if self.cfg.family == "encdec":
             batch["frames"] = jnp.zeros((1, self.cfg.enc_seq, self.cfg.d_model))
         logits, one = self._prefill_cache(self.params, batch, one)
-        # Caches interact across slots only through the batch dim; splice the
-        # new row in.  NOTE: the shared per-layer `len` counter means slots
-        # decode in lockstep positions — prompts must share a length within
-        # a trace (``traces.TraceSpec`` enforces this).  Per-slot position
-        # vectors are a serve-layer upgrade tracked in DESIGN.md.
+        # Caches interact across slots only through the batch dim; splice
+        # the new row in.  The per-layer `len` leaves are per-row vectors,
+        # so the fresh row lands at its own prompt length while co-resident
+        # slots keep decoding at theirs — one batch can mix prompt lengths.
         self.cache = _splice_cache(self.cache, one, slot)
         self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)
-        self._pos_bound = max(self._pos_bound, len(req.prompt))
+        self.slot_pos[slot] = self._prefix + len(req.prompt)
         return int(jnp.argmax(logits[0, -1]))
 
     def lowered_decode(self):
@@ -179,11 +184,17 @@ class ServeEngine:
             if active == 0:
                 step += 1
                 continue
-            if self._pos_bound + 1 > self.max_len:
-                raise RuntimeError(
-                    f"KV cache exhausted: lockstep position bound "
-                    f"{self._pos_bound + 1} > max_len {self.max_len} — size "
-                    f"the engine with traces.cache_len_bound() for the trace")
+            for s in range(self.slots):
+                req = self.slot_req[s]
+                if req is None or req.done:
+                    continue   # idle rows may overflow harmlessly (clamped
+                    #            write, row fully rewritten at next admit)
+                if self.slot_pos[s] + 1 > self.max_len:
+                    raise RuntimeError(
+                        f"KV cache exhausted: slot {s} (rid {req.rid}) at "
+                        f"position {int(self.slot_pos[s])} with max_len "
+                        f"{self.max_len} — size the engine with "
+                        f"traces.cache_len_bound() for the trace")
             ts = time.perf_counter()
             toks = jnp.asarray(next_tok[:, None])
             logits, self.cache = self._decode(self.params, toks, self.cache)
@@ -198,7 +209,7 @@ class ServeEngine:
             dt = time.perf_counter() - ts
             self.steps += 1
             step += 1
-            self._pos_bound += 1
+            self.slot_pos += 1   # decode advances every row's len vector
             for s in range(self.slots):
                 req = self.slot_req[s]
                 if req is None or req.done:
@@ -220,6 +231,14 @@ class ServeEngine:
                 "queue_depth_mean": (sum(qdepth) / len(qdepth)) if qdepth else 0.0,
                 "queue_depth_max": max(qdepth) if qdepth else 0,
                 "tokens_by_rid": tokens_by_rid(requests)}
+
+    def capture(self, requests: List[Request], *, seed: int = 0,
+                source: str = "live") -> TraceSpec:
+        """A replayable ``TraceSpec`` of a served trace: per-request prompt
+        lengths, arrivals, and budgets pinned, prompt *content* regenerated
+        from ``(seed, lengths)`` — so a live run becomes a regression asset
+        via the ordinary ``save_spec`` schema (``trace="file:..."``)."""
+        return capture_spec(requests, seed=seed, source=source)
 
 
 def summarize_metrics(out: Dict[str, Any]) -> Dict[str, Any]:
@@ -258,12 +277,16 @@ class Server(ServeEngine):
 
 
 def _splice_cache(big, one, slot: int):
-    """Write single-row cache `one` into row `slot` of the batched cache."""
+    """Write single-row cache `one` into row `slot` of the batched cache.
+
+    Every cache leaf — including the per-layer `len` position vectors — is
+    batched over slots, so admission is a plain row write: the fresh row
+    (KV contents *and* its position) replaces whatever the retired request
+    left behind.  Equal shapes means a single-slot engine: the fresh cache
+    replaces the old one wholesale."""
     def f(b, s):
         if b.ndim == s.ndim and b.shape == s.shape:
-            # per-layer scalars (len): decode advances all slots in lockstep;
-            # keep the max so positions stay monotone.
-            return jnp.maximum(b, s)
+            return s
         # find the batch axis: first axis where shapes differ
         for ax in range(b.ndim):
             if b.shape[ax] != s.shape[ax]:
@@ -283,6 +306,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--trace", default="uniform",
                     help="load profile: uniform | bursty | mixed")
+    ap.add_argument("--prompt-profile", default="fixed",
+                    help="prompt-length profile: fixed | uniform | bimodal "
+                         "| longtail")
+    ap.add_argument("--capture", default="",
+                    help="write a replayable TraceSpec of this run to PATH")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
@@ -294,12 +322,17 @@ def main(argv=None) -> int:
         built = build_arch(args.arch)
     spec = TraceSpec(profile=args.trace, requests=args.requests,
                      prompt_len=args.prompt_len, max_new=args.max_new,
-                     seed=args.seed)
+                     seed=args.seed, prompt_profile=args.prompt_profile)
     reqs = generate(spec, vocab=built.cfg.vocab)
+    prefix = built.cfg.n_prefix if built.cfg.family == "vlm" else 0
     engine = ServeEngine(built, slots=args.slots,
-                         max_len=cache_len_bound(reqs, spec.prompt_len))
+                         max_len=cache_len_bound(reqs, prefix=prefix))
     out = engine.run(reqs)
     m = summarize_metrics(out)
+    if args.capture:
+        save_spec(engine.capture(reqs, seed=args.seed,
+                                 source=f"cli:{args.arch}"), args.capture)
+        print(f"captured trace spec -> {args.capture}")
     print(f"served {args.requests} requests ({args.trace}): {out['tokens']} tokens "
           f"in {out['wall_s']:.2f}s ({m['tok_per_s']:.1f} tok/s, "
           f"{out['decode_steps']} steps)")

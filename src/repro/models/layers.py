@@ -133,11 +133,13 @@ NEG_INF = -1e30
 
 
 def _mask_bias(q_pos, k_pos, mask_type: str, window: int, prefix_len: int):
-    """(Q,K) additive bias in fp32 for the given mask type."""
-    qp = q_pos[:, None]
+    """Additive bias in fp32 for the given mask type: (Q,K) for 1-d
+    ``q_pos``, (B,Q,K) for per-row (batched) ``q_pos`` (B,Q) — the
+    serve engine's per-slot decode positions."""
+    qp = q_pos[..., :, None]
     kp = k_pos[None, :]
     if mask_type == "full":
-        allowed = jnp.ones(qp.shape[:1] + kp.shape[1:], dtype=bool)
+        allowed = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
     elif mask_type == "causal":
         allowed = kp <= qp
     elif mask_type == "local":
@@ -157,8 +159,10 @@ def attention(
     mask_type: str = "causal",
     window: int = 0,
     prefix_len: int = 0,
-    q_offset: Any = 0,          # absolute position of q[0] (int or traced)
-    kv_len: Optional[jax.Array] = None,  # valid kv length (decode w/ cache)
+    q_offset: Any = 0,          # position of q[0]: scalar, or (B,) per-row
+    kv_len: Optional[jax.Array] = None,  # valid kv length (decode w/ cache):
+                                         # scalar, or (B,) per-row
+
     chunk: int = 512,
     softmax_scale: Optional[float] = None,
     logit_softcap: float = 0.0,
@@ -168,6 +172,8 @@ def attention(
 
     Handles GQA (H a multiple of K), causal / local / prefix / full masks and
     decode-with-cache (Sq small, kv_len masks the unwritten cache tail).
+    ``q_offset``/``kv_len`` may be per-row (B,) vectors — the serve engine's
+    per-slot cache positions — in which case the mask bias is (B, Q, K).
     """
     B, Sq, H, D = q.shape
     _, Sk, K, _ = k.shape
@@ -199,7 +205,10 @@ def attention(
     # (B,K,G,Sq,D): the kv-chunk dot then writes scores directly in the
     # (b,k,g,q,s) carry layout — avoids a full-score-tensor transpose.
     qt = qf.transpose(0, 2, 3, 1, 4)
-    q_pos = q_offset + jnp.arange(Sq)
+    qo = jnp.asarray(q_offset)
+    # per-row offsets (B,) -> per-row positions (B, Sq); scalar -> (Sq,)
+    q_pos = (qo[:, None] if qo.ndim else qo) + jnp.arange(Sq)
+    kl = None if kv_len is None else jnp.asarray(kv_len)
 
     if Sk <= chunk or Sq == 1:
         # single-block path (decode or short sequences)
@@ -208,9 +217,11 @@ def attention(
         if logit_softcap > 0:
             s = jnp.tanh(s / logit_softcap) * logit_softcap
         bias = _mask_bias(q_pos, jnp.arange(Sk), mask_type, window, prefix_len)
-        if kv_len is not None:
-            bias = bias + jnp.where(jnp.arange(Sk)[None, :] < kv_len, 0.0, NEG_INF)
-        s = s + bias
+        if kl is not None:
+            lim = kl[:, None, None] if kl.ndim else kl
+            bias = bias + jnp.where(jnp.arange(Sk) < lim, 0.0, NEG_INF)
+        # (B,Q,K) bias aligns at the batch axis of the (b,k,g,q,s) scores
+        s = s + (bias[:, None, None] if bias.ndim == 3 else bias)
         p = jax.nn.softmax(s, axis=-1).astype(sdt)
         o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(sdt),
                        preferred_element_type=jnp.float32)
@@ -237,9 +248,9 @@ def attention(
         if logit_softcap > 0:
             s = jnp.tanh(s / logit_softcap) * logit_softcap
         bias = _mask_bias(q_pos, k_pos, mask_type, window, prefix_len)
-        valid = k_pos < Sk if kv_len is None else k_pos < kv_len
-        bias = (bias + jnp.where(valid[None, :], 0.0, NEG_INF)).astype(sdt)
-        s = s + bias
+        lim = Sk if kl is None else (kl[:, None, None] if kl.ndim else kl)
+        bias = (bias + jnp.where(k_pos < lim, 0.0, NEG_INF)).astype(sdt)
+        s = s + (bias[:, None, None] if bias.ndim == 3 else bias)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None].astype(sdt))
@@ -285,6 +296,20 @@ def gqa_defs(cfg, layers_prefix: Tuple[int, ...] = ()) -> dict:
     return defs
 
 
+def _row_update(cache_arr: jax.Array, fresh: jax.Array, idx: jax.Array):
+    """Write ``fresh`` (B, S, ...) into ``cache_arr`` (B, max, ...), each
+    row at its own offset ``idx`` (B,) — the per-slot KV-cache write.
+    (dynamic_update_slice clamps an out-of-range start to the cache edge;
+    only a retired serve slot ever overflows, and its row is fully
+    overwritten at the next admission.)"""
+    fresh = fresh.astype(cache_arr.dtype)
+
+    def one(c, f, i):
+        return jax.lax.dynamic_update_slice(c, f, (i,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(one)(cache_arr, fresh, idx)
+
+
 def gqa_attention(
     p: dict,
     x: jax.Array,                      # (B, S, E)
@@ -293,8 +318,8 @@ def gqa_attention(
     mask_type: str,
     window: int = 0,
     prefix_len: int = 0,
-    positions: Optional[jax.Array] = None,   # (S,) absolute positions
-    cache: Optional[dict] = None,      # {"k","v": (B, max, K, D), "len": ()}
+    positions: Optional[jax.Array] = None,   # (S,) or per-row (B, S)
+    cache: Optional[dict] = None,      # {"k","v": (B, max, K, D), "len": (B,)}
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     B, S, E = x.shape
@@ -314,7 +339,7 @@ def gqa_attention(
 
     if positions is None:
         positions = jnp.arange(S)
-    q_offset = positions[0]
+    q_offset = positions[:, 0] if positions.ndim == 2 else positions[0]
 
     if cfg.rope_theta > 0 and cross_kv is None:
         cos, sin = rope_freqs(positions, D, cfg.rope_theta)
@@ -324,6 +349,9 @@ def gqa_attention(
     kv_len = None
     new_cache = None
     if cache is not None and cross_kv is None:
+        # per-row positions: "len" is a (B,) vector — each row (serve
+        # slot) writes and attends at its own offset, so one decode batch
+        # can mix prompt lengths (admission rewinds just its row's len)
         idx = cache["len"]
         Wc = cache["k"].shape[1]
         ring = mask_type == "local" and Wc == window and window > 0
@@ -343,16 +371,16 @@ def gqa_attention(
         elif ring:
             # decode: write at slot idx % W; all live entries are in-window
             slot = jax.lax.rem(idx, Wc)
-            k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            k_all = _row_update(cache["k"], k, slot)
+            v_all = _row_update(cache["v"], v, slot)
             new_cache = {"k": k_all, "v": v_all, "len": idx + S}
             k, v = k_all.astype(cdt), v_all.astype(cdt)
             kv_len = jnp.minimum(idx + S, Wc)
             mask_type = "full"   # ring membership IS the window mask
             q_offset = idx
         else:
-            k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-            v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            k_all = _row_update(cache["k"], k, idx)
+            v_all = _row_update(cache["v"], v, idx)
             new_cache = {"k": k_all, "v": v_all, "len": idx + S}
             k, v = k_all.astype(cdt), v_all.astype(cdt)
             kv_len = idx + S

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.distributed import logical
 from repro.models.layers import (
-    NEG_INF, ParamDef, apply_rope, attention, rms_norm, rope_freqs,
+    NEG_INF, ParamDef, _row_update, apply_rope, attention, rms_norm,
+    rope_freqs,
 )
 
 
@@ -79,7 +80,8 @@ def mla_attention(
         v = jnp.einsum("bsl,lhd->bshd", c_kv, p["wv_b"].astype(cdt))
         k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, Dr))], axis=-1)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
-        out = attention(q, k, v, mask_type="causal", q_offset=positions[0],
+        q_off = positions[:, 0] if positions.ndim == 2 else positions[0]
+        out = attention(q, k, v, mask_type="causal", q_offset=q_off,
                         chunk=cfg.attn_chunk, softmax_scale=scale,
                         bf16_probs=cfg.opt_bf16_probs)
         out = logical(out, ("act_batch", "act_seq", "act_heads", None))
@@ -87,9 +89,9 @@ def mla_attention(
         return y, None
 
     # --- cached path ---
-    idx = cache["len"]
-    ckv_all = jax.lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, idx, 0))
-    kr_all = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype), (0, idx, 0))
+    idx = cache["len"]                       # (B,) per-row positions
+    ckv_all = _row_update(cache["ckv"], c_kv, idx)
+    kr_all = _row_update(cache["krope"], k_rope, idx)
     new_cache = {"ckv": ckv_all, "krope": kr_all, "len": idx + S}
 
     if S > 1:
@@ -117,10 +119,11 @@ def mla_attention(
     s = jnp.einsum("bshl,btl->bhst", q_c, ckv_all.astype(cdt)).astype(jnp.float32)
     s = s + jnp.einsum("bshd,btd->bhst", q_rope, kr_all.astype(cdt)).astype(jnp.float32)
     s = s * scale
-    q_pos = idx + jnp.arange(S)
+    q_pos = idx[:, None] + jnp.arange(S)     # (B, S) per-row positions
     t_pos = jnp.arange(Sk)
-    allowed = (t_pos[None, :] <= q_pos[:, None]) & (t_pos[None, :] < kv_len)
-    s = jnp.where(allowed[None, None], s, NEG_INF)
+    allowed = (t_pos[None, None, :] <= q_pos[:, :, None]) \
+        & (t_pos[None, None, :] < kv_len[:, None, None])   # (B, S, Sk)
+    s = jnp.where(allowed[:, None], s, NEG_INF)            # s: (B, H, S, Sk)
     pr = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btl->bshl", pr.astype(cdt), ckv_all.astype(cdt))
     out = jnp.einsum("bshl,lhd->bshd", o_lat, p["wv_b"].astype(cdt))
@@ -136,5 +139,5 @@ def mla_cache_defs(cfg, batch: int, max_len: int, layers_prefix: Tuple[int, ...]
     return {
         "ckv": ParamDef(lp + (batch, max_len, cfg.kv_lora), la + ("cache_batch", "cache_seq", None), cdt, "zeros"),
         "krope": ParamDef(lp + (batch, max_len, cfg.qk_rope_dim), la + ("cache_batch", "cache_seq", None), cdt, "zeros"),
-        "len": ParamDef(lp + (), la + (), jnp.int32, "zeros"),
+        "len": ParamDef(lp + (batch,), la + ("cache_batch",), jnp.int32, "zeros"),
     }

@@ -107,7 +107,9 @@ def _kv_cache_defs(cfg, batch: int, max_len: int, kind: str, lp=()):
     return {
         "k": ParamDef(lp + (batch, size, K, D), la + ("cache_batch", "cache_seq", "cache_heads", None), cdt, "zeros"),
         "v": ParamDef(lp + (batch, size, K, D), la + ("cache_batch", "cache_seq", "cache_heads", None), cdt, "zeros"),
-        "len": ParamDef(lp + (), la + (), jnp.int32, "zeros"),
+        # per-row position vector: each batch row (serve slot) decodes at
+        # its own offset, so one decode batch can mix prompt lengths
+        "len": ParamDef(lp + (batch,), la + ("cache_batch",), jnp.int32, "zeros"),
     }
 
 
@@ -509,19 +511,25 @@ class Model:
         return {**cache, "blocks": blocks}
 
     def decode_step(self, params, tokens, cache):
-        """tokens (B, 1) -> (logits (B,1,V), new cache)."""
+        """tokens (B, 1) -> (logits (B,1,V), new cache).
+
+        Positions are per-row: each batch row decodes at its own cache
+        offset (the ``len`` vector), so a continuous-batching decode step
+        can mix rows whose prompts had different lengths."""
         cfg = self.cfg
-        pos = self._cache_len(cache)
-        positions = pos + jnp.arange(1)
+        pos = self._cache_len(cache)            # (B,)
+        positions = pos[:, None] + jnp.arange(1)  # (B, 1)
         x = self._embed(params, tokens, positions)
         x, cache = self._run_layers(params, x, positions, cache)
         return self._head(params, x), cache
 
     def _cache_len(self, cache):
+        """The per-row position vector (B,) from the first "len" leaf
+        (all layers' counters advance identically)."""
         lens = [v for k, v in jax.tree_util.tree_flatten_with_path(cache)[0]
                 if k and getattr(k[-1], "key", None) == "len"]
         x = lens[0]
-        return x.reshape(-1)[0] if x.ndim else x
+        return x.reshape(-1, x.shape[-1])[0] if x.ndim > 1 else x
 
 
 def build_model(cfg) -> Model:

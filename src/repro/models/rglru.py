@@ -131,7 +131,7 @@ def rglru_cache_defs(cfg, batch: int, layers_prefix: Tuple[int, ...] = ()) -> di
     return {
         "conv": ParamDef(lp + (batch, cfg.conv_width - 1, D), la + ("cache_batch", None, "cache_heads"), cfg.compute_dtype, "zeros"),
         "h": ParamDef(lp + (batch, D), la + ("cache_batch", "cache_heads"), jnp.float32, "zeros"),
-        "len": ParamDef(lp + (), la + (), jnp.int32, "zeros"),
+        "len": ParamDef(lp + (batch,), la + ("cache_batch",), jnp.int32, "zeros"),
     }
 
 

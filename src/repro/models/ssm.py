@@ -144,7 +144,7 @@ def mamba2_cache_defs(cfg, batch: int, layers_prefix: Tuple[int, ...] = ()) -> d
     return {
         "conv": ParamDef(lp + (batch, cfg.conv_width - 1, conv_ch), la + ("cache_batch", None, "cache_heads"), cfg.compute_dtype, "zeros"),
         "ssm": ParamDef(lp + (batch, H, P, N), la + ("cache_batch", "cache_heads", None, "cache_state"), jnp.float32, "zeros"),
-        "len": ParamDef(lp + (), la + (), jnp.int32, "zeros"),
+        "len": ParamDef(lp + (batch,), la + ("cache_batch",), jnp.int32, "zeros"),
     }
 
 

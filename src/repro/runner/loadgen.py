@@ -1,0 +1,93 @@
+"""Load-generation helpers for ``task="loadgen"`` cells.
+
+A loadgen cell replays a (shard of a) deterministic trace against the
+continuous-batching serve engine at a scaled *offered load*, so a matrix
+sweeping ``loads=(0.5, 1.0, 2.0, 4.0)`` measures a TTFT/p99-vs-load
+curve; sweeping ``splits=("0/2", "1/2")`` across cluster workers replays
+trace shards against as many engines as the pool has workers — the
+N-workers-x-M-engines fleet measurement, dispatched through the same
+JSONL protocol as every other cell.
+
+Both transforms act on the generated ``Request`` list, never on the
+spec: the prompt tokens stay a pure function of (trace spec, params), so
+shard digests are stable and a sharded run's union equals the unsharded
+trace.
+
+``find_knee`` post-processes a measured curve: offered load is swept up,
+throughput saturates, and the knee is the last point whose marginal
+throughput gain over the previous point still exceeds ~5% — past it the
+engine only queues (TTFT and p99 climb with no tok/s to show for it).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from repro.runner.traces import Request
+
+#: marginal-throughput-gain threshold that defines saturation
+KNEE_GAIN = 0.05
+
+
+def parse_split(split: str) -> Tuple[int, int]:
+    """``"i/n"`` -> (i, n), validated (0 <= i < n, n >= 1)."""
+    try:
+        i_s, n_s = split.split("/")
+        i, n = int(i_s), int(n_s)
+    except ValueError:
+        raise ValueError(f"split must be 'i/n', got {split!r}") from None
+    if n < 1 or not (0 <= i < n):
+        raise ValueError(f"split {split!r} needs 0 <= i < n")
+    return i, n
+
+
+def shard_requests(requests: List[Request], split: str) -> List[Request]:
+    """Shard ``i/n``: keep every n-th request by rid order, starting at i.
+
+    Deterministic in the request ids alone (not list order, not arrival
+    times), so the same split expression names the same shard on every
+    worker, and the n shards partition the trace exactly.
+    """
+    if not split:
+        return requests
+    i, n = parse_split(split)
+    by_rid = sorted(requests, key=lambda r: r.rid)
+    keep = {r.rid for j, r in enumerate(by_rid) if j % n == i}
+    return [r for r in requests if r.rid in keep]
+
+
+def scale_arrivals(requests: List[Request], load: float) -> List[Request]:
+    """Offered load: compress (load > 1) or stretch (load < 1) the virtual
+    arrival clock — ``arrival' = floor(arrival / load)``.  load=1.0 is the
+    identity; the transform mutates arrival steps in place and returns the
+    list for chaining.  Tokens are unaffected (arrivals only schedule slot
+    admission; each request's output depends only on its own prompt)."""
+    if load <= 0:
+        raise ValueError(f"load must be > 0, got {load}")
+    if load != 1.0:
+        for r in requests:
+            r.arrival_step = int(math.floor(r.arrival_step / load))
+    return requests
+
+
+def find_knee(points: Sequence[Dict[str, float]]) -> Dict[str, float]:
+    """The saturation knee of a measured load curve.
+
+    ``points`` are dicts with at least ``load`` and ``tok_per_s`` (one per
+    swept offered load, any order).  Returns ``{"knee_load", "knee_tok_s"}``
+    — the highest offered load whose step still bought a >= ``KNEE_GAIN``
+    marginal throughput gain (scanning all steps, so one noisy mid-curve
+    plateau doesn't end the search early).  With 0 or 1 points, or when
+    no step ever bought throughput, the first point is the knee.
+    """
+    pts = sorted(points, key=lambda p: p["load"])
+    if not pts:
+        return {"knee_load": 0.0, "knee_tok_s": 0.0}
+    knee = pts[0]
+    for prev, cur in zip(pts, pts[1:]):
+        base = prev["tok_per_s"]
+        gain = (cur["tok_per_s"] - base) / base if base > 0 else 0.0
+        if gain >= KNEE_GAIN:
+            knee = cur
+    return {"knee_load": float(knee["load"]),
+            "knee_tok_s": float(knee["tok_per_s"])}

@@ -83,7 +83,7 @@ def _subprocess_env() -> Dict[str, str]:
 #: prefills) — only the ratios matter, and only for load balance, never
 #: for correctness
 _TASK_WEIGHT = {"train": 4, "infer_prefill": 2, "infer_decode": 1,
-                "serve": 8, "kernel": 1}
+                "serve": 8, "loadgen": 8, "kernel": 1}
 
 
 def rank_groups(scenarios: Sequence[Scenario]) -> List[Tuple[List[int], int]]:

@@ -67,6 +67,33 @@ decode latencies* (not step times) and ``runs`` is the request count:
     extra["tokens"]        list   generated tokens per request, rid order —
                                   the serial-vs-sharded determinism witness
     extra["tokens_digest"] str    sha256 of extra["tokens"]
+    extra["prompt_len_p50"|"prompt_len_p95"]         prompt-length
+                                  percentiles of the replayed trace (mixed
+                                  lengths per batch are first-class: the
+                                  KV cache keeps per-slot position vectors)
+    extra["capture"]       dict   capture provenance: the replayed trace
+                                  as a ``traces.save_spec``-schema payload
+                                  (per-request lengths/arrivals/budgets
+                                  pinned, ``source="capture:<cell name>"``)
+                                  — write it to a file and replay it with
+                                  ``trace="file:PATH"`` for a byte-
+                                  identical regression run
+
+Loadgen cells (``task="loadgen"``: a serve replay under transformed
+load — trace sharded by ``scenario.split``, virtual arrival clock scaled
+by ``scenario.load``; see ``repro.runner.loadgen``) carry all the serve
+keys above plus:
+
+    extra["offered_load"]  float  the arrival-clock multiplier this cell
+                                  replayed at (>1 compresses arrivals)
+    extra["split"]         str    trace shard "i/n" ("" = whole trace)
+
+and a swept curve's summary record (``benchmarks/loadgen_curve.py``)
+carries the post-processed saturation knee:
+
+    extra["knee_load"|"knee_tok_s"]   highest offered load that still
+                                  bought >= ~5% marginal throughput, and
+                                  the throughput measured there
 
 Kernel micro-bench cells (``task="kernel"``, the autotuner's candidate
 timings — ``repro.tuning``; still schema v1): the scenario ``arch`` axis

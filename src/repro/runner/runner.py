@@ -215,7 +215,7 @@ class BenchmarkRunner:
             return self._run_isolated(scenario, hook=hook, runs=runs,
                                       warmup=warmup, record=record,
                                       profile=prof)
-        if scenario.task == "serve":
+        if scenario.task in ("serve", "loadgen"):
             return self._run_serve(scenario, hook=hook, record=record,
                                    profile=prof)
         if scenario.task == "kernel":
@@ -384,18 +384,26 @@ class BenchmarkRunner:
     def _run_serve(self, scenario: Scenario, *,
                    hook: Optional[RegressionHook] = None,
                    record: bool = True, profile: bool = False) -> RunResult:
-        """One serving cell: regenerate the scenario's trace, replay it
-        through the (cached) engine, and fold the latency distribution into
-        a RunResult — ``median_us``/``mean_us``/``p10_us``/``p90_us`` are
-        per-token decode latencies, and the TTFT/per-token p50/p95/p99 +
-        throughput land under the well-known ``extra`` keys documented in
-        ``runner/results.py``.
+        """One serving or loadgen cell: regenerate the scenario's trace,
+        replay it through the (cached) engine, and fold the latency
+        distribution into a RunResult — ``median_us``/``mean_us``/
+        ``p10_us``/``p90_us`` are per-token decode latencies, and the
+        TTFT/per-token p50/p95/p99 + throughput land under the well-known
+        ``extra`` keys documented in ``runner/results.py``.
+
+        ``task="loadgen"`` is serve under transformed load: the trace is
+        sharded (``scenario.split``) then its virtual arrival clock scaled
+        by the offered load (``scenario.load``) before replay — the cell
+        additionally records ``offered_load``/``split`` so a swept matrix
+        yields a latency-vs-load curve.
 
         ``profile=True`` records a per-decode-step phase timeline during
         the measured replay and attributes it over the decode step's HLO
         op classes; replay wall time outside decode steps (admission,
         prefill, queue management) shows up as the profile's idle share."""
         from repro.launch.serve import summarize_metrics
+        from repro.runner.loadgen import scale_arrivals, shard_requests
+        from repro.runner.traces import capture_spec
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
         key = None
@@ -406,9 +414,16 @@ class BenchmarkRunner:
                                    mode=scenario.mode)
             model_reused = self.stats.model_cache_hits > hits0
             reqs = generate_trace(spec, vocab=built.cfg.vocab)
-            # sized for the whole replay: the engine's lockstep position
-            # counter keeps advancing across slot refills
-            max_len = cache_len_bound(reqs, spec.prompt_len)
+            if scenario.task == "loadgen":
+                reqs = scale_arrivals(shard_requests(reqs, scenario.split),
+                                      scenario.load)
+                if not reqs:
+                    raise ValueError(f"split {scenario.split!r} leaves an "
+                                     f"empty shard of {spec.requests} requests")
+            # sized for the whole replay: per-slot positions mean a row
+            # never needs more than its own prompt + budget (+ vlm prefix)
+            prefix = built.cfg.n_prefix if built.cfg.family == "vlm" else 0
+            max_len = cache_len_bound(reqs, prefix=prefix)
             key = (scenario.build_key(), scenario.mode, max_len)
             engine, engine_reused = self._serve_engine_for(scenario, built,
                                                            max_len)
@@ -428,8 +443,19 @@ class BenchmarkRunner:
                 [] if profile else None
             out = engine.run(reqs, hook=hook, phase_log=phase_log)
             extra = summarize_metrics(out)
+            plens = sorted(len(r.prompt) for r in reqs)
             extra.update(trace=scenario.trace, slots=scenario.slots,
-                         tokens=out["tokens_by_rid"])
+                         tokens=out["tokens_by_rid"],
+                         prompt_len_p50=percentile(plens, 50),
+                         prompt_len_p95=percentile(plens, 95))
+            # capture provenance: the replayed trace as a save_spec-schema
+            # payload, so any recorded serve/loadgen run is replayable via
+            # trace="file:PATH" (load sharding/scaling already applied)
+            extra["capture"] = dataclasses.asdict(capture_spec(
+                reqs, seed=spec.seed, source=f"capture:{scenario.name}"))
+            if scenario.task == "loadgen":
+                extra.update(offered_load=scenario.load,
+                             split=scenario.split)
             if profile:
                 extra.update(self._profile_extra(
                     ("serve-cost",) + key, phase_log,

@@ -25,10 +25,13 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 STEP_TASKS = ("train", "infer_prefill", "infer_decode")
 
 #: all tasks: the step tasks, the continuous-batching serving workload
-#: (a whole engine run per cell, ``repro.launch.serve``), and the kernel
-#: micro-bench cells of the autotuner (``repro.tuning``), whose ``arch``
-#: axis names a tuning candidate instead of a registry arch
-TASKS = STEP_TASKS + ("serve", "kernel")
+#: (a whole engine run per cell, ``repro.launch.serve``), the
+#: load-generation mode over that same engine (``task="loadgen"``: replay
+#: a trace shard at a scaled offered load — N workers x M engines comes
+#: free from ordinary matrix dispatch), and the kernel micro-bench cells
+#: of the autotuner (``repro.tuning``), whose ``arch`` axis names a
+#: tuning candidate instead of a registry arch
+TASKS = STEP_TASKS + ("serve", "loadgen", "kernel")
 
 #: the only execution mode for kernel micro-bench cells: a tuning
 #: candidate is one jitted ops-layer call — eager dispatch and the
@@ -85,6 +88,8 @@ class Scenario:
     mode: str = "jit_donated"
     slots: int = 0
     trace: str = ""
+    load: float = 0.0
+    split: str = ""
 
     def __post_init__(self):
         if self.task not in TASKS:
@@ -93,9 +98,9 @@ class Scenario:
             raise ValueError(f"unknown mode {self.mode!r} (known: {MODES})")
         if self.dtype not in DTYPES:
             raise ValueError(f"unknown dtype {self.dtype!r} (known: {DTYPES})")
-        if self.task == "serve":
+        if self.task in ("serve", "loadgen"):
             if self.mode not in SERVE_MODES:
-                raise ValueError(f"serve supports modes {SERVE_MODES}, "
+                raise ValueError(f"{self.task} supports modes {SERVE_MODES}, "
                                  f"not {self.mode!r}")
             # normalize the serve axes so Scenario(task="serve") works bare
             if self.slots == 0:
@@ -104,19 +109,41 @@ class Scenario:
                 object.__setattr__(self, "trace", "uniform")
             if self.slots < 1:
                 raise ValueError(f"serve needs slots >= 1, got {self.slots}")
-            from repro.runner.traces import FILE_PREFIX, PROFILES
+            from repro.runner.traces import (FILE_PREFIX, PROFILES,
+                                             PROMPT_PROFILES, split_trace)
             if self.trace.startswith(FILE_PREFIX):
                 # a recorded trace-spec file (traces.save_spec); resolved
                 # lazily on the host that runs the cell — a missing file
                 # becomes that cell's error record, not a matrix error
                 if not self.trace[len(FILE_PREFIX):]:
                     raise ValueError("trace='file:' needs a path")
-            elif self.trace not in PROFILES:
-                raise ValueError(f"unknown trace profile {self.trace!r} "
-                                 f"(known: {PROFILES}, or 'file:PATH')")
-        elif self.slots or self.trace:
-            raise ValueError(f"slots/trace are serve-only axes "
-                             f"(task={self.task!r})")
+            else:
+                arrival, plen = split_trace(self.trace)
+                if arrival not in PROFILES:
+                    raise ValueError(
+                        f"unknown trace profile {arrival!r} (known: "
+                        f"{PROFILES}, or 'file:PATH')")
+                if plen not in PROMPT_PROFILES:
+                    raise ValueError(
+                        f"unknown prompt-length profile {plen!r} "
+                        f"(known: {PROMPT_PROFILES})")
+        if self.task == "loadgen":
+            # offered-load multiplier over the trace's native arrival rate;
+            # normalize 0 (the inert default) to 1.0 so bare loadgen works
+            if self.load == 0.0:
+                object.__setattr__(self, "load", 1.0)
+            if not self.load > 0:
+                raise ValueError(f"loadgen needs load > 0, got {self.load}")
+            if self.split and not re.fullmatch(r"\d+/\d+", self.split):
+                raise ValueError(
+                    f"split must be 'i/n' (e.g. '0/2'), got {self.split!r}")
+        elif self.task == "serve":
+            if self.load or self.split:
+                raise ValueError("load/split are loadgen-only axes "
+                                 "(use task='loadgen')")
+        elif self.slots or self.trace or self.load or self.split:
+            raise ValueError(f"slots/trace/load/split are serve/loadgen-only "
+                             f"axes (task={self.task!r})")
         if self.task == "kernel":
             if self.mode not in KERNEL_MODES:
                 raise ValueError(f"kernel cells support modes {KERNEL_MODES}, "
@@ -141,6 +168,12 @@ class Scenario:
         base = f"{self.arch}/{self.task}/b{self.batch}/s{self.seq}/{self.dtype}/{self.mode}"
         if self.task == "serve":
             return f"{base}/x{self.slots}/{self.trace}"
+        if self.task == "loadgen":
+            name = f"{base}/x{self.slots}/{self.trace}/L{self.load:g}"
+            if self.split:
+                i, n = self.split.split("/")
+                name += f"/{i}of{n}"
+            return name
         return base
 
     def build_overrides(self) -> Dict[str, Any]:
@@ -158,7 +191,9 @@ class Scenario:
         (arch, slots) group should land on one worker and share engines.
         """
         base = (self.arch, self.dtype, self.mode in MODE_OVERRIDES and self.mode)
-        if self.task == "serve":
+        if self.task in ("serve", "loadgen"):
+            # loadgen shares the serve group: same slots -> same compiled
+            # decode executable and cached engine on whichever worker runs it
             return base + ("serve", self.slots)
         if self.task == "kernel":
             # one group per candidate: kernel cells share no arch build,
@@ -199,9 +234,11 @@ class ScenarioMatrix:
       known-broken models).
 
     ``slots`` / ``traces`` are the serve-only axes: they multiply out
-    only under ``task="serve"`` (every other task gets exactly one
-    scenario per (arch, batch, seq, dtype, mode) cell, with the serve
-    axes inert).  Serve cells silently skip modes outside
+    only under ``task="serve"`` / ``task="loadgen"`` (every other task
+    gets exactly one scenario per (arch, batch, seq, dtype, mode) cell,
+    with the serve axes inert); ``loads`` / ``splits`` additionally
+    multiply out under ``task="loadgen"`` only — an offered-load sweep
+    over trace shards.  Serve cells silently skip modes outside
     ``SERVE_MODES`` — a matrix mixing ``tasks=("train", "serve")`` with
     ``modes=("eager", ...)`` expands the eager cell for train only.
     ``task="kernel"`` (the autotuner's micro-bench cells, opt-in like
@@ -221,6 +258,8 @@ class ScenarioMatrix:
     modes: Sequence[str] = ("jit_donated",)
     slots: Sequence[int] = (4,)
     traces: Sequence[str] = ("uniform",)
+    loads: Sequence[float] = (1.0,)       # loadgen-only: offered-load sweep
+    splits: Sequence[str] = ("",)         # loadgen-only: trace shards "i/n"
     filter: Sequence[str] = ()
     exclude: Sequence[str] = ()
     skip: Sequence[str] = ()
@@ -245,6 +284,14 @@ class ScenarioMatrix:
                 cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
                                   dtype=dtype, mode=mode, slots=k, trace=t)
                          for k, t in itertools.product(self.slots, self.traces)]
+            elif task == "loadgen":
+                if mode not in SERVE_MODES:
+                    continue      # loadgen drives the serve engine: same modes
+                cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
+                                  dtype=dtype, mode=mode, slots=k, trace=t,
+                                  load=ld, split=sp)
+                         for k, t, ld, sp in itertools.product(
+                             self.slots, self.traces, self.loads, self.splits)]
             elif task == "kernel":
                 if mode not in KERNEL_MODES:
                     continue      # kernel micro-bench cells are jit-only

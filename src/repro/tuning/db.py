@@ -88,12 +88,19 @@ class TuningDB:
                params: dict, median_us: float,
                default_params: Optional[dict] = None,
                default_us: float = 0.0, case: str = "",
-               candidates: int = 0) -> dict:
-        """Store one sweep winner; returns the stored entry."""
+               candidates: int = 0, backend: str = "") -> dict:
+        """Store one sweep winner; returns the stored entry.
+
+        ``backend`` is sweep-time provenance (``jax.default_backend()``):
+        tile economics tuned on one backend don't transfer, so the consult
+        path ignores entries stamped with a different backend.  Empty
+        means unknown (pre-provenance entries) and always serves."""
         entry = {"params": dict(params), "median_us": float(median_us),
                  "default_params": dict(default_params or {}),
                  "default_us": float(default_us), "case": case,
                  "candidates": int(candidates), "ts": time.time()}
+        if backend:
+            entry["backend"] = str(backend)
         self.entries[entry_key(kernel, signature, dtype)] = entry
         return entry
 
@@ -157,4 +164,20 @@ def tuned_params(kernel: str, signature: str, dtype: str,
     e = cached[2].get(entry_key(kernel, signature, dtype))
     if not isinstance(e, dict) or not isinstance(e.get("params"), dict):
         return None
+    swept_on = e.get("backend", "")
+    if swept_on and swept_on != _current_backend():
+        # swept on a different backend: its tile choices are noise here —
+        # fall back to the built-in defaults rather than serve them
+        return None
     return dict(e["params"])
+
+
+def _current_backend() -> str:
+    """``jax.default_backend()``, lazily — this module stays importable
+    (and the no-provenance consult path stays jax-free) on a bare stdlib;
+    the first backend-stamped entry consulted pays the import."""
+    try:
+        import jax
+        return str(jax.default_backend())
+    except Exception:  # noqa: BLE001 — no jax == no way to mismatch
+        return ""

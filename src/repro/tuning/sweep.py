@@ -26,6 +26,17 @@ from repro.tuning import space
 from repro.tuning.db import TuningDB
 
 
+def _sweep_backend() -> str:
+    """Backend provenance stamped on every recorded winner: tile-size
+    economics measured on cpu say nothing about tpu (and vice versa), so
+    the consult path (``db.tuned_params``) drops mismatched entries."""
+    try:
+        import jax
+        return str(jax.default_backend())
+    except Exception:  # noqa: BLE001 — unstampable, entry serves anywhere
+        return ""
+
+
 def _case_cells(case: space.KernelCase,
                 max_candidates: Optional[int] = None) -> List[Tuple[str, Dict[str, int]]]:
     """(candidate id, params) pairs for one case, default first."""
@@ -113,7 +124,8 @@ def run_sweep(cases: Sequence[space.KernelCase], runner, *,
                   params=winner["params"], median_us=winner["median_us"],
                   default_params=default_params,
                   default_us=default_us or 0.0,
-                  case=case.case_id, candidates=len(cells))
+                  case=case.case_id, candidates=len(cells),
+                  backend=_sweep_backend())
         recorded += 1
         summary["cases"].append(entry)
     if save and recorded:

@@ -169,23 +169,25 @@ def test_serve_run_records_latency_metrics(tmp_path):
 
 
 def test_serve_many_refill_waves_fit_the_cache():
-    """requests >> slots: the shared lockstep position counter advances
-    across every refill wave, so the KV cache must be sized for the whole
-    replay (cache_len_bound), not one request's worth — undersizing used
-    to clamp KV writes silently and now raises loudly."""
+    """requests >> slots: per-slot positions rewind on refill, so the KV
+    cache needs exactly the largest single-request footprint (prompt +
+    budget) — no lockstep slack, however many refill waves the replay
+    has.  One token less and the engine must refuse to decode past its
+    cache instead of corrupting attention."""
     from repro.core.suite import build_arch
     from repro.launch.serve import ServeEngine
     from repro.runner.traces import cache_len_bound
     spec = TraceSpec("uniform", 6, 8, 4)
     reqs = generate_trace(spec, vocab=1000)
     built = build_arch("gemma-2b")
-    bound = cache_len_bound(reqs, spec.prompt_len)   # 8 + (24 - 6) + 8
-    assert bound == 34
+    bound = cache_len_bound(reqs)
+    assert bound == 8 + 4        # tight: max(prompt + max_new), no +8 slack
     out = ServeEngine(built, slots=2, max_len=bound).run(reqs)
     assert out["tokens"] == 6 * 4 and out["decode_steps"] <= 18
-    # 3 waves of 2 slots: an engine sized for a single wave must refuse
-    # to decode past its cache instead of corrupting attention
-    small = ServeEngine(built, slots=2, max_len=spec.prompt_len + 4)
+    # the last KV write of a request lands at prompt + max_new - 2 (the
+    # final emitted token is never written back), so two positions short
+    # must raise rather than silently clamp writes
+    small = ServeEngine(built, slots=2, max_len=bound - 2)
     with pytest.raises(RuntimeError, match="KV cache exhausted"):
         small.run(generate_trace(spec, vocab=1000))
 
