@@ -65,6 +65,14 @@ end: the three sweep archs are profiled, ``low_util`` is forced to fire
 distinct cells), and the resulting findings enqueue tuning jobs into
 ``results/tuning_queue.json``.
 
+Part 7 — admission policies: the same queue-forming trace (bursty
+bimodal arrivals, offered load compressed so admission waves actually
+form) replayed under ``admission="batched"`` (one jitted prefill per
+wave, bucketed padded shapes) and ``admission="single"`` (the
+one-prefill-per-request baseline).  Reported: the TTFT p99 ratio, the
+jitted prefill-call counts, and the token-digest equality gate — batched
+admission must be a pure scheduling change, byte-identical tokens.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -383,6 +391,42 @@ def main(fast: bool = False, runner=None) -> None:
          f"n={len(tuning_jobs)};findings={len(bridge_findings)};"
          f"queue={queue_path}")
 
+    # admission policies: batched wave prefill vs per-request baseline on
+    # the same queue-forming trace (loadgen at a compressed offered load —
+    # native bursty arrivals rarely queue >1 request against free slots)
+    adm_runner = BenchmarkRunner(measure_fence=False)
+    adm_cells = {}
+    try:
+        for adm in ("batched", "single"):
+            sc = Scenario(arch=ARCH, task="loadgen", batch=8, seq=16,
+                          slots=4, trace="bursty+bimodal", load=4.0,
+                          admission=adm)
+            rr = adm_runner.run(sc, record=False)
+            if rr.status != "ok":
+                raise RuntimeError(f"{sc.name}: {rr.error}")
+            ex = rr.extra
+            adm_cells[adm] = {"name": rr.name,
+                              "ttft_p99_us": ex["ttft_p99"],
+                              "tok_per_s": ex["tok_per_s"],
+                              "prefill_calls": ex["admit_calls"],
+                              "admit_batch_mean": ex["admit_batch_mean"],
+                              "admit_batch_max": ex["admit_batch_max"],
+                              "admit_shapes": ex["admit_shapes"],
+                              "tokens_digest": ex["tokens_digest"]}
+    finally:
+        del adm_runner
+        gc.collect()
+    adm_digest_ok = (adm_cells["batched"]["tokens_digest"]
+                     == adm_cells["single"]["tokens_digest"])
+    adm_ttft_ratio = (adm_cells["batched"]["ttft_p99_us"]
+                      / adm_cells["single"]["ttft_p99_us"]
+                      if adm_cells["single"]["ttft_p99_us"] else 0.0)
+    emit("runner_bench/admission_ttft_p99_ratio", 0.0,
+         f"{adm_ttft_ratio:.2f}x;digests_match={adm_digest_ok};"
+         f"prefill_calls={adm_cells['batched']['prefill_calls']}"
+         f"vs{adm_cells['single']['prefill_calls']};"
+         f"batch_max={adm_cells['batched']['admit_batch_max']}")
+
     with open(results_path("runner_bench.json"), "w") as f:
         json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
                    "seed_path_s": seed_s, "runner_path_s": runner_s,
@@ -407,6 +451,9 @@ def main(fast: bool = False, runner=None) -> None:
                                   "cluster_local_s": cluster_s,
                                   "steal_win_vs_static": steal_win,
                                   "cluster_ratio_vs_steal": cluster_ratio},
+                   "admission": {"cells": adm_cells,
+                                 "digests_match": adm_digest_ok,
+                                 "ttft_p99_ratio": adm_ttft_ratio},
                    "tuning": {"jobs": JOBS, "wall_s": tuning_wall,
                               "db_path": tuning["db_path"],
                               "cases": tuning["cases"],

@@ -48,6 +48,9 @@ def main(fast: bool = False, runner=None) -> None:
              f"qmax={ex['queue_depth_max']}")
         rows.append({"name": rr.name, "arch": rr.arch, "slots": ex["slots"],
                      "trace": ex["trace"], "requests": rr.runs,
+                     "admission": ex["admission"],
+                     "admit_calls": ex["admit_calls"],
+                     "admit_batch_mean": ex["admit_batch_mean"],
                      "tok_per_s": ex["tok_per_s"],
                      "decode_steps": ex["decode_steps"],
                      "queue_depth_mean": ex["queue_depth_mean"],

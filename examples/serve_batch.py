@@ -25,6 +25,9 @@ def main() -> int:
           f"{ex['decode_steps']} batched decode steps "
           f"(queue depth mean {ex['queue_depth_mean']:.2f}, "
           f"max {ex['queue_depth_max']})")
+    print(f"  admission={ex['admission']}: {ex['admit_calls']} jitted "
+          f"prefill calls, batch mean {ex['admit_batch_mean']:.2f} "
+          f"max {ex['admit_batch_max']}, shapes {ex['admit_shapes']}")
     print(f"  ttft_us    p50={ex['ttft_p50']:.0f} p95={ex['ttft_p95']:.0f} "
           f"p99={ex['ttft_p99']:.0f}")
     print(f"  tok_lat_us p50={ex['tok_lat_p50']:.0f} p95={ex['tok_lat_p95']:.0f} "

@@ -73,6 +73,31 @@ print(f"  capture replay digest match: {rr2.extra['tokens_digest'][:16]}")
 print("capture smoke OK")
 EOF
 
+echo "== batched admission: digest equality vs single-prefill baseline =="
+python - <<'EOF'
+from repro.runner import BenchmarkRunner, Scenario
+
+# a queue-forming cell (compressed bursty bimodal arrivals) replayed
+# under both admission policies: batched wave prefill must generate the
+# byte-identical token streams of the one-prefill-per-request baseline
+runner = BenchmarkRunner()
+cell = dict(arch="gemma-2b", task="loadgen", batch=6, seq=8, slots=3,
+            trace="bursty+bimodal", load=8.0)
+rb = runner.run(Scenario(**cell), record=False)
+rs = runner.run(Scenario(**cell, admission="single"), record=False)
+assert rb.status == "ok", rb.error
+assert rs.status == "ok", rs.error
+print(f"  batched: {rb.extra['admit_calls']} prefill calls "
+      f"(batch max {rb.extra['admit_batch_max']}), "
+      f"single: {rs.extra['admit_calls']} calls")
+assert rb.extra["tokens_digest"] == rs.extra["tokens_digest"], \
+    (rb.extra["tokens_digest"], rs.extra["tokens_digest"])
+assert rb.extra["admit_batch_max"] >= 2, rb.extra["admit_batch_max"]
+assert rb.extra["admit_calls"] < rs.extra["admit_calls"]
+print(f"  admission digest match: {rb.extra['tokens_digest'][:16]}")
+print("admission smoke OK")
+EOF
+
 echo "== profiled cell: measured timeline + attribution through the runner =="
 python - <<'EOF'
 from repro.runner import BenchmarkRunner, Scenario
@@ -188,5 +213,8 @@ fops.flash_attention_bh = orig
 assert served == dict(row["winner"]), (served, row["winner"])
 print("tuning smoke OK")
 EOF
+
+echo "== tuning queue drain: profile_report --drain-queue (serial) =="
+python -m benchmarks.profile_report --drain-queue
 
 echo "smoke OK"

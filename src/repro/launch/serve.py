@@ -3,9 +3,22 @@ workload — NOT ``repro.runner.worker --serve``, which is the benchmark
 pool's worker-protocol flag; see the disambiguation note below).
 
 A minimal production-shaped server: a request queue with virtual-time
-arrivals, a prefill stage, and a batched decode loop with per-slot
-completion and refill (continuous batching).  Runs reduced configs on CPU
-(examples, tests) and full configs on a TPU mesh via the same code path.
+arrivals, a batched prefill admission stage, and a batched decode loop
+with per-slot completion and refill (continuous batching).  Runs reduced
+configs on CPU (examples, tests) and full configs on a TPU mesh via the
+same code path.
+
+Admission (PR 8): each loop iteration admits one *wave* — every waiting
+request paired with a free slot — through ONE jitted prefill call per
+prompt-length bucket (``admission="batched"``, the default).  Prompts
+are right-padded into power-of-two length buckets and row counts rounded
+to powers of two, so the number of compiled prefill shapes is bounded by
+the bucket grid (buckets x log2(slots)), not by the number of distinct
+prompt lengths; per-request masks/gathers inside the model make the
+padded rows exact, so tokens are byte-identical to the
+``admission="single"`` per-request baseline (kept as an engine flag and
+scenario axis for A/B measurement — ``benchmarks/loadgen_curve.py``
+sweeps both policies side by side).
 
 Layering (ISSUE 3):
 
@@ -45,43 +58,84 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.layers import ParamDef
 from repro.runner.latency import latency_summary
 from repro.runner.traces import (Request, TraceSpec, cache_len_bound,
                                  capture_spec, generate, save_spec,
                                  tokens_by_rid, tokens_digest)
+
+#: smallest padded prompt-length bucket for batched admission; buckets
+#: double from here, so compile count is bounded by
+#: log2(max_len / ADMIT_MIN_BUCKET) x log2(slots), not by distinct lengths
+ADMIT_MIN_BUCKET = 8
+
+#: valid values of the engine's ``admission`` policy flag
+ADMISSIONS = ("batched", "single")
 
 
 class ServeEngine:
     """Slot-based continuous batching over a shared decode step.
 
     ``built`` is a ``repro.core.suite.Built`` (or anything with ``cfg`` /
-    ``model`` / ``params`` attributes).  The engine jits its prefill and
+    ``model`` / ``params`` attributes).  The engine jits its admission and
     decode steps once at construction; ``run()`` resets all per-trace
     state, so one engine instance (and its compiled executables) can
     replay any number of traces — the BenchmarkRunner caches engines per
-    (build, slots, max_len) exactly like step executables.
+    (build, slots, max_len, admission) exactly like step executables.
+
+    Admission prefills waiting requests *directly into the live cache*:
+    each wave gathers every admissible queued request, groups them by
+    padded prompt-length bucket, and runs one jitted call per group —
+    prefill on a fresh k-row mini cache, per-row last-valid-position
+    argmax, then a masked row scatter into the target slots (the per-slot
+    ``len`` position vectors land each row at its own prompt length).
+
+    ``admission="batched"`` (default) pads prompts to power-of-two
+    buckets (>= ``ADMIT_MIN_BUCKET``) and rounds the batch to a power of
+    two, so the compile count is bounded by buckets, not distinct prompt
+    lengths.  ``admission="single"`` is the pre-batching baseline kept
+    runnable for comparison: one exact-length single-row call per request
+    (recompiling per distinct length), token-identical to batched
+    admission by construction.  The MoE family always uses exact-length
+    groups even under ``"batched"``: expert capacity is sized from the
+    token count, so pad tokens would compete with valid tokens for
+    capacity slots and could change routing.
     """
 
     def __init__(self, built, *, slots: int, max_len: int,
-                 donate: bool = True):
+                 donate: bool = True, admission: str = "batched"):
+        if admission not in ADMISSIONS:
+            raise ValueError(f"unknown admission {admission!r} "
+                             f"(known: {ADMISSIONS})")
         self.cfg = built.cfg
         self.model = built.model
         self.params = built.params
         self.slots = slots
         self.max_len = max_len
+        self.admission = admission
         # vlm prefill writes n_prefix patch tokens ahead of the prompt, so
         # a slot's cache position starts past the prefix after admission
         self._prefix = built.cfg.n_prefix if built.cfg.family == "vlm" else 0
-        dargs = (2,) if donate else ()
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=dargs)
-        self._prefill_cache = jax.jit(
-            lambda p, b, c: self.model.prefill(p, b, c), donate_argnums=dargs)
+        self._decode = jax.jit(self.model.decode_step,
+                               donate_argnums=(2,) if donate else ())
+        self._admit = jax.jit(self._admit_impl,
+                              donate_argnums=(5,) if donate else ())
+        # per-leaf batch axis of every cache leaf, from the declared
+        # logical axes — the admission scatter needs it explicitly because
+        # a full wave's mini cache has the same row count as the live one
+        self._cache_axes = jax.tree.map(
+            lambda d: d.axes.index("cache_batch"),
+            self.model.cache_defs(slots, max_len),
+            is_leaf=lambda v: isinstance(v, ParamDef))
+        # distinct (rows, padded_len) shapes ever admitted — the host-side
+        # mirror of the jit cache, cumulative over the engine's lifetime
+        self._admit_shapes: set = set()
         self._reset()
 
     def _reset(self) -> None:
@@ -93,25 +147,91 @@ class ServeEngine:
         # its KV write clamped to the cache edge, corrupting attention.
         self.slot_pos = np.zeros(self.slots, np.int32)
         self.steps = 0
+        self._admit_calls = 0
+        self._admit_batches: List[int] = []
 
-    def _admit(self, req: Request, slot: int) -> int:
-        """Prefill a single request into ``slot``; returns first token."""
-        # per-slot prefill on a fresh single-row cache, then splice in
-        one = self.model.init_cache(1, self.max_len)
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+    # ---- batched admission ------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        """Padded prompt length for an ``n``-token prompt."""
+        if self.admission == "single" or self.cfg.family == "moe":
+            return n          # exact length (see class docstring)
+        b = ADMIT_MIN_BUCKET
+        while b < n:
+            b *= 2
+        return min(b, self.max_len - self._prefix)
+
+    def _admit_impl(self, params, tokens, lengths, src, mask, cache):
+        """One jitted admission: prefill ``tokens`` (kb, Lpad) with valid
+        prefixes ``lengths`` (kb,) on a fresh kb-row mini cache, then
+        scatter mini row ``src[s]`` into live-cache row ``s`` wherever
+        ``mask[s]`` (``src``/``mask`` are runtime data, so the compile is
+        keyed only by the (kb, Lpad) shape).  Returns each admitted row's
+        first token and the updated cache."""
+        kb = tokens.shape[0]
+        mini = self.model.init_cache(kb, self.max_len)
+        batch = {"tokens": tokens}
         if self.cfg.family == "vlm":
-            batch["patch_embeds"] = jnp.zeros((1, self.cfg.n_prefix, self.cfg.d_model))
+            batch["patch_embeds"] = jnp.zeros(
+                (kb, self.cfg.n_prefix, self.cfg.d_model))
         if self.cfg.family == "encdec":
-            batch["frames"] = jnp.zeros((1, self.cfg.enc_seq, self.cfg.d_model))
-        logits, one = self._prefill_cache(self.params, batch, one)
-        # Caches interact across slots only through the batch dim; splice
-        # the new row in.  The per-layer `len` leaves are per-row vectors,
-        # so the fresh row lands at its own prompt length while co-resident
-        # slots keep decoding at theirs — one batch can mix prompt lengths.
-        self.cache = _splice_cache(self.cache, one, slot)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = self._prefix + len(req.prompt)
-        return int(jnp.argmax(logits[0, -1]))
+            batch["frames"] = jnp.zeros(
+                (kb, self.cfg.enc_seq, self.cfg.d_model))
+        logits, mini = self.model.prefill(params, batch, mini,
+                                          lengths=lengths)
+        first = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+
+        def scatter(big, small, ax):
+            rows = jnp.take(small, src, axis=ax).astype(big.dtype)
+            shape = [1] * big.ndim
+            shape[ax] = self.slots
+            return jnp.where(mask.reshape(shape), rows, big)
+
+        cache = jax.tree.map(scatter, cache, mini, self._cache_axes)
+        return first, cache
+
+    def _admit_wave(self, pairs: List[Tuple[int, Request]]) -> List[int]:
+        """Admit a wave of (slot, request) pairs; returns their first
+        tokens in pair order.  Batched admission groups the wave by
+        prompt-length bucket — one jitted call per group; single admission
+        degrades to one exact-length call per request."""
+        if self.admission == "single":
+            grouped = [[pr] for pr in pairs]
+        else:
+            by_bucket: Dict[int, List[Tuple[int, Request]]] = {}
+            for pr in pairs:
+                by_bucket.setdefault(self._bucket(len(pr[1].prompt)),
+                                     []).append(pr)
+            grouped = [by_bucket[b] for b in sorted(by_bucket)]
+        first_by_slot: Dict[int, int] = {}
+        for grp in grouped:
+            lpad = self._bucket(max(len(r.prompt) for _, r in grp))
+            kb = len(grp)
+            if self.admission == "batched":
+                kb = 1 << (kb - 1).bit_length()   # round rows to pow2
+            tokens = np.zeros((kb, lpad), np.int32)
+            # dummy rows keep lengths=lpad (their full-garbage state is
+            # simply never gathered by src)
+            lengths = np.full((kb,), lpad, np.int32)
+            src = np.zeros((self.slots,), np.int32)
+            mask = np.zeros((self.slots,), bool)
+            for i, (s, r) in enumerate(grp):
+                tokens[i, : len(r.prompt)] = r.prompt
+                lengths[i] = len(r.prompt)
+                src[s] = i
+                mask[s] = True
+            first, self.cache = self._admit(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(src), jnp.asarray(mask), self.cache)
+            first = np.asarray(first)
+            self._admit_calls += 1
+            self._admit_batches.append(len(grp))
+            self._admit_shapes.add((kb, lpad))
+            for i, (s, r) in enumerate(grp):
+                self.slot_req[s] = r
+                self.slot_pos[s] = self._prefix + len(r.prompt)
+                first_by_slot[s] = int(first[i])
+        return [first_by_slot[s] for s, _ in pairs]
 
     def lowered_decode(self):
         """Lower the jitted decode step against the engine's live state —
@@ -138,6 +258,7 @@ class ServeEngine:
         is passed, so unprofiled replays keep the pre-profiler timing.
         """
         self._reset()
+        shapes0 = len(self._admit_shapes)
         upcoming = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
         for r in upcoming:
             r.out, r.done = [], False
@@ -161,25 +282,29 @@ class ServeEngine:
                 # virtual clock to the next arrival (no idle decode spins)
                 step = upcoming[0].arrival_step
                 continue
-            for s in range(self.slots):
-                if not waiting:
-                    break
-                if self.slot_req[s] is not None and not self.slot_req[s].done:
-                    continue
-                req = waiting.pop(0)
-                tok = self._admit(req, s)
-                req.out.append(tok)
-                tokens_out += 1
-                tnow = time.perf_counter()
-                req.t_first = tnow
-                ttft_s.append(tnow - req.t_arrival)
-                next_tok[s] = tok
-                active += 1
-                if len(req.out) >= req.max_new:     # budget of 1: done at prefill
-                    req.done = True
-                    req.t_done = tnow
-                    active -= 1
-                    done_count += 1
+            if waiting:
+                # one admission wave: free slots in ascending order take
+                # waiting requests FIFO (the same assignment the old
+                # per-request loop produced), then prefill per bucket group
+                free = [s for s in range(self.slots)
+                        if self.slot_req[s] is None or self.slot_req[s].done]
+                pairs = list(zip(free, waiting))
+                if pairs:
+                    del waiting[: len(pairs)]
+                    firsts = self._admit_wave(pairs)
+                    tnow = time.perf_counter()
+                    for (s, req), tok in zip(pairs, firsts):
+                        req.out.append(tok)
+                        tokens_out += 1
+                        req.t_first = tnow
+                        ttft_s.append(tnow - req.t_arrival)
+                        next_tok[s] = tok
+                        active += 1
+                        if len(req.out) >= req.max_new:  # budget of 1: done
+                            req.done = True              # at prefill
+                            req.t_done = tnow
+                            active -= 1
+                            done_count += 1
             qdepth.append(len(waiting))
             if active == 0:
                 step += 1
@@ -224,12 +349,23 @@ class ServeEngine:
                     active -= 1
                     done_count += 1
         wall = time.perf_counter() - t0
+        ab = self._admit_batches
         return {"requests": total, "decode_steps": self.steps,
                 "tokens": tokens_out, "wall_s": wall,
                 "tok_per_s": tokens_out / wall if wall else 0.0,
                 "ttft_s": ttft_s, "tok_lat_s": tok_lat_s,
                 "queue_depth_mean": (sum(qdepth) / len(qdepth)) if qdepth else 0.0,
                 "queue_depth_max": max(qdepth) if qdepth else 0,
+                "admission": self.admission,
+                "admit_calls": self._admit_calls,
+                "admit_batch_mean": (sum(ab) / len(ab)) if ab else 0.0,
+                "admit_batch_max": max(ab) if ab else 0,
+                "admit_shapes": sorted(list(s) for s in self._admit_shapes),
+                # prefill shapes first compiled DURING this replay: > 0 means
+                # the replay paid admission jits (queue dynamics at this load
+                # reached bucket shapes no earlier replay had) and its wall/
+                # TTFT samples are not steady-state — rerun to re-measure
+                "admit_new_shapes": len(self._admit_shapes) - shapes0,
                 "tokens_by_rid": tokens_by_rid(requests)}
 
     def capture(self, requests: List[Request], *, seed: int = 0,
@@ -244,7 +380,7 @@ class ServeEngine:
 def summarize_metrics(out: Dict[str, Any]) -> Dict[str, Any]:
     """The well-known serve metric keys (see ``runner/results.py``) from an
     engine ``run()`` payload: TTFT / per-token latency p50/p95/p99 in us,
-    throughput, queue depth, and the token digest."""
+    throughput, queue depth, admission counters, and the token digest."""
     summary: Dict[str, Any] = {
         "tok_per_s": out["tok_per_s"],
         "decode_steps": out["decode_steps"],
@@ -252,6 +388,10 @@ def summarize_metrics(out: Dict[str, Any]) -> Dict[str, Any]:
         "queue_depth_max": out["queue_depth_max"],
         "tokens_digest": tokens_digest(out["tokens_by_rid"]),
     }
+    for k in ("admission", "admit_calls", "admit_batch_mean",
+              "admit_batch_max", "admit_shapes"):
+        if k in out:
+            summary[k] = out[k]
     summary.update(latency_summary(out["ttft_s"], "ttft", scale=1e6))
     summary.update(latency_summary(out["tok_lat_s"], "tok_lat", scale=1e6))
     return summary
@@ -269,32 +409,14 @@ def built_for_cfg(cfg, seed: int = 0):
 
 class Server(ServeEngine):
     """Compat shim over ``ServeEngine`` for direct (non-runner) callers:
-    builds the model from a config, like the pre-runner serving driver."""
+    builds the model from a config, like the pre-runner serving driver.
+    Serves through the same bucketed batched-admission path as the
+    runner-cached engines (``admission`` passes through)."""
 
-    def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0):
+    def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0,
+                 admission: str = "batched"):
         super().__init__(built_for_cfg(cfg, seed), slots=slots,
-                         max_len=max_len)
-
-
-def _splice_cache(big, one, slot: int):
-    """Write single-row cache `one` into row `slot` of the batched cache.
-
-    Every cache leaf — including the per-layer `len` position vectors — is
-    batched over slots, so admission is a plain row write: the fresh row
-    (KV contents *and* its position) replaces whatever the retired request
-    left behind.  Equal shapes means a single-slot engine: the fresh cache
-    replaces the old one wholesale."""
-    def f(b, s):
-        if b.ndim == s.ndim and b.shape == s.shape:
-            return s
-        # find the batch axis: first axis where shapes differ
-        for ax in range(b.ndim):
-            if b.shape[ax] != s.shape[ax]:
-                idx = [0] * b.ndim
-                idx[ax] = slot
-                return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), tuple(idx))
-        return b
-    return jax.tree.map(f, big, one)
+                         max_len=max_len, admission=admission)
 
 
 def main(argv=None) -> int:
@@ -311,6 +433,10 @@ def main(argv=None) -> int:
                          "| longtail")
     ap.add_argument("--capture", default="",
                     help="write a replayable TraceSpec of this run to PATH")
+    ap.add_argument("--admission", default="batched", choices=ADMISSIONS,
+                    help="prefill admission policy: batched (bucketed "
+                         "multi-request prefill) | single (per-request "
+                         "baseline)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
@@ -326,7 +452,8 @@ def main(argv=None) -> int:
     reqs = generate(spec, vocab=built.cfg.vocab)
     prefix = built.cfg.n_prefix if built.cfg.family == "vlm" else 0
     engine = ServeEngine(built, slots=args.slots,
-                         max_len=cache_len_bound(reqs, prefix=prefix))
+                         max_len=cache_len_bound(reqs, prefix=prefix),
+                         admission=args.admission)
     out = engine.run(reqs)
     m = summarize_metrics(out)
     if args.capture:
@@ -335,7 +462,8 @@ def main(argv=None) -> int:
         print(f"captured trace spec -> {args.capture}")
     print(f"served {args.requests} requests ({args.trace}): {out['tokens']} tokens "
           f"in {out['wall_s']:.2f}s ({m['tok_per_s']:.1f} tok/s, "
-          f"{out['decode_steps']} steps)")
+          f"{out['decode_steps']} steps, {args.admission} admission: "
+          f"{out['admit_calls']} prefill calls)")
     print(f"  ttft_us    p50={m.get('ttft_p50', 0):.0f} "
           f"p95={m.get('ttft_p95', 0):.0f} p99={m.get('ttft_p99', 0):.0f}")
     print(f"  tok_lat_us p50={m.get('tok_lat_p50', 0):.0f} "

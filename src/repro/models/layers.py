@@ -321,6 +321,8 @@ def gqa_attention(
     positions: Optional[jax.Array] = None,   # (S,) or per-row (B, S)
     cache: Optional[dict] = None,      # {"k","v": (B, max, K, D), "len": (B,)}
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    seq_lens: Optional[jax.Array] = None,    # (B,) valid prefix per row
+                                             # (batched padded prefill)
 ) -> Tuple[jax.Array, Optional[dict]]:
     B, S, E = x.shape
     D = cfg.head_dim
@@ -355,18 +357,33 @@ def gqa_attention(
         idx = cache["len"]
         Wc = cache["k"].shape[1]
         ring = mask_type == "local" and Wc == window and window > 0
+        # padded batched prefill: each row's valid prefix ends at seq_lens[r];
+        # garbage keys past it sit at positions >= idx + seq_lens, which the
+        # causal/local/prefix position masks already exclude for every valid
+        # query, and kv_len masks the rest at decode.
+        S_eff = S if seq_lens is None else seq_lens
         if ring and S > 1:
             # prefill a ring buffer: attend over the fresh full-length k/v
             # with the local mask, then store the last W tokens at slots
             # pos % W (softmax is order-free; RoPE already applied).
-            if S >= Wc:
+            if seq_lens is not None:
+                # per-row gather: ring slot j holds the highest valid
+                # position congruent to j mod Wc (== the roll below when the
+                # row is exactly full; rows shorter than the window leave
+                # garbage at slots >= seq_lens, masked at decode by kv_len)
+                j = jnp.arange(Wc)[None, :]
+                lv = seq_lens[:, None]
+                src = jnp.clip(j + Wc * ((lv - 1 - j) // Wc), 0, S - 1)
+                rk = jnp.take_along_axis(k, src[..., None, None], axis=1)
+                rv = jnp.take_along_axis(v, src[..., None, None], axis=1)
+            elif S >= Wc:
                 rk = jnp.roll(k[:, -Wc:], S % Wc, axis=1)
                 rv = jnp.roll(v[:, -Wc:], S % Wc, axis=1)
             else:
                 pad = ((0, 0), (0, Wc - S), (0, 0), (0, 0))
                 rk, rv = jnp.pad(k, pad), jnp.pad(v, pad)
             new_cache = {"k": rk.astype(cache["k"].dtype),
-                         "v": rv.astype(cache["v"].dtype), "len": idx + S}
+                         "v": rv.astype(cache["v"].dtype), "len": idx + S_eff}
             q_offset = idx
         elif ring:
             # decode: write at slot idx % W; all live entries are in-window
@@ -381,9 +398,9 @@ def gqa_attention(
         else:
             k_all = _row_update(cache["k"], k, idx)
             v_all = _row_update(cache["v"], v, idx)
-            new_cache = {"k": k_all, "v": v_all, "len": idx + S}
+            new_cache = {"k": k_all, "v": v_all, "len": idx + S_eff}
             k, v = k_all.astype(cdt), v_all.astype(cdt)
-            kv_len = idx + S
+            kv_len = idx + S_eff
             q_offset = idx
 
     scale = cfg.softmax_scale if cfg.softmax_scale else None
@@ -439,17 +456,29 @@ def ffn(p: dict, x: jax.Array, cfg) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None,
+                  lengths: Optional[jax.Array] = None):
     """x (B, S, C), w (W, C) depthwise causal conv.
 
     Returns (y, new_state) where state is the last W-1 inputs (B, W-1, C).
+    ``lengths`` (B,) marks each row's valid prefix under right-padded
+    batched prefill: the carried state is then gathered per row at its own
+    boundary instead of from the padded tail (``lengths[r] == S`` for every
+    row reproduces the unpadded slice exactly).
     """
     W = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
-    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    if W == 1:
+        new_state = None
+    elif lengths is None:
+        new_state = xp[:, -(W - 1):, :]
+    else:
+        # row r's last W-1 valid inputs live at xp[lengths[r] : lengths[r]+W-1]
+        idx = lengths[:, None] + jnp.arange(W - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     y = jnp.zeros_like(x)
     for i in range(W):
         y = y + xp[:, i : i + x.shape[1], :] * w[i]

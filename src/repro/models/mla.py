@@ -60,6 +60,8 @@ def mla_attention(
     *,
     positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None,   # {"ckv": (B,max,kv_lora), "krope": (B,max,R), "len"}
+    seq_lens: Optional[jax.Array] = None,   # (B,) valid prefix per row
+                                            # (batched padded prefill)
 ) -> Tuple[jax.Array, Optional[dict]]:
     B, S, _ = x.shape
     cdt = cfg.compute_dtype
@@ -92,7 +94,11 @@ def mla_attention(
     idx = cache["len"]                       # (B,) per-row positions
     ckv_all = _row_update(cache["ckv"], c_kv, idx)
     kr_all = _row_update(cache["krope"], k_rope, idx)
-    new_cache = {"ckv": ckv_all, "krope": kr_all, "len": idx + S}
+    # padded batched prefill: garbage latents past a row's seq_lens sit at
+    # positions >= idx + seq_lens — excluded for every valid query by the
+    # causal mask here and by kv_len at decode
+    new_cache = {"ckv": ckv_all, "krope": kr_all,
+                 "len": idx + (S if seq_lens is None else seq_lens)}
 
     if S > 1:
         # Prefill: write the latent cache but run *chunked decompressed*

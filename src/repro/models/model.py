@@ -40,23 +40,27 @@ def _norm_def(cfg, lp=()):
 
 
 def _attn_ffn_block(p, x, cfg, *, kind: str, positions, cache, use_moe: bool,
-                    d_ff: Optional[int] = None):
+                    d_ff: Optional[int] = None, seq_lens=None):
     mask = "causal" if kind == "global" else "local"
     if kind == "prefix":
         mask = "prefix"
     window = cfg.local_window if mask == "local" else 0
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if cfg.use_mla:
-        h, new_c = mla.mla_attention(p["attn"], h, cfg, positions=positions, cache=cache)
+        h, new_c = mla.mla_attention(p["attn"], h, cfg, positions=positions,
+                                     cache=cache, seq_lens=seq_lens)
     else:
         h, new_c = L.gqa_attention(
             p["attn"], h, cfg, mask_type=mask, window=window,
             prefix_len=cfg.n_prefix if kind == "prefix" else 0,
-            positions=positions, cache=cache)
+            positions=positions, cache=cache, seq_lens=seq_lens)
     x = x + h
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     if use_moe:
-        h = moe.moe_ffn(p["mlp"], h, cfg)
+        # serving admission (seq_lens set): one dispatch group per row, so
+        # expert capacity — a per-group resource — can't couple co-admitted
+        # requests' routing (see moe_ffn)
+        h = moe.moe_ffn(p["mlp"], h, cfg, row_groups=seq_lens is not None)
     else:
         h = L.ffn(p["mlp"], h, cfg)
     x = x + h
@@ -69,9 +73,10 @@ def _attn_block_defs(cfg, lp, *, use_moe: bool, d_ff=None):
     return {"ln1": _norm_def(cfg, lp), "attn": attn, "ln2": _norm_def(cfg, lp), "mlp": mlp}
 
 
-def _rec_block(p, x, cfg, *, cache):
+def _rec_block(p, x, cfg, *, cache, seq_lens=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
-    h, new_c = rglru.rglru_block(p["rec"], h, cfg, cache=cache)
+    h, new_c = rglru.rglru_block(p["rec"], h, cfg, cache=cache,
+                                 seq_lens=seq_lens)
     x = x + h
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     x = x + L.ffn(p["mlp"], h, cfg)
@@ -83,9 +88,10 @@ def _rec_block_defs(cfg, lp):
             "ln2": _norm_def(cfg, lp), "mlp": L.ffn_defs(cfg, None, lp)}
 
 
-def _mamba_block(p, x, cfg, *, cache):
+def _mamba_block(p, x, cfg, *, cache, seq_lens=None):
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    h, new_c = ssm.mamba2_block(p["mix"], h, cfg, cache=cache)
+    h, new_c = ssm.mamba2_block(p["mix"], h, cfg, cache=cache,
+                                seq_lens=seq_lens)
     return logical(x + h, ("act_batch", "act_seq", "act_embed")), new_c
 
 
@@ -233,7 +239,7 @@ class Model:
         return x, (ys if has_cache else None)
 
     def _run_layers(self, params, x, positions, cache, kind_override=None,
-                    enc_out=None):
+                    enc_out=None, seq_lens=None):
         cfg = self.cfg
         fam = cfg.family
         new_cache: Dict[str, Any] = {}
@@ -245,12 +251,14 @@ class Model:
                 def group_body(p_g, x, c_g):
                     def local_body(p_i, x, c_i):
                         return _attn_ffn_block(p_i, x, cfg, kind="local",
-                                               positions=positions, cache=c_i, use_moe=False)
+                                               positions=positions, cache=c_i,
+                                               use_moe=False, seq_lens=seq_lens)
                     c_loc = c_g["local"] if c_g is not None else None
                     x, c_loc_new = self._scan_stack(local_body, x, p_g["local"], c_loc)
                     x, c_glob_new = _attn_ffn_block(
                         p_g["global"], x, cfg, kind="global", positions=positions,
-                        cache=(c_g["global"] if c_g is not None else None), use_moe=False)
+                        cache=(c_g["global"] if c_g is not None else None),
+                        use_moe=False, seq_lens=seq_lens)
                     if c_g is None:
                         return x, 0.0
                     return x, {"local": c_loc_new, "global": c_glob_new}
@@ -263,7 +271,8 @@ class Model:
                 def body(p_i, x, c_i, use_moe):
                     kind = prefix_kind or ("local" if cfg.local_window > 0 else "global")
                     return _attn_ffn_block(p_i, x, cfg, kind=kind, positions=positions,
-                                           cache=c_i, use_moe=use_moe)
+                                           cache=c_i, use_moe=use_moe,
+                                           seq_lens=seq_lens)
 
                 if "dense_blocks" in params:  # deepseek first dense layer(s)
                     c = cache.get("dense_blocks") if cache else None
@@ -279,7 +288,7 @@ class Model:
 
         elif fam == "ssm":
             def body(p_i, x, c_i):
-                return _mamba_block(p_i, x, cfg, cache=c_i)
+                return _mamba_block(p_i, x, cfg, cache=c_i, seq_lens=seq_lens)
             c = cache.get("blocks") if cache else None
             x, c_new = self._scan_stack(body, x, params["blocks"], c)
             if cache is not None:
@@ -288,12 +297,13 @@ class Model:
         elif fam == "hybrid":
             def group_body(p_g, x, c_g):
                 def rec_body(p_i, x, c_i):
-                    return _rec_block(p_i, x, cfg, cache=c_i)
+                    return _rec_block(p_i, x, cfg, cache=c_i, seq_lens=seq_lens)
                 c_rec = c_g["rec"] if c_g is not None else None
                 x, c_rec_new = self._scan_stack(rec_body, x, p_g["rec"], c_rec)
                 x, c_attn_new = _attn_ffn_block(
                     p_g["attn"], x, cfg, kind="local", positions=positions,
-                    cache=(c_g["attn"] if c_g is not None else None), use_moe=False)
+                    cache=(c_g["attn"] if c_g is not None else None),
+                    use_moe=False, seq_lens=seq_lens)
                 if c_g is None:
                     return x, 0.0
                 return x, {"rec": c_rec_new, "attn": c_attn_new}
@@ -304,7 +314,7 @@ class Model:
                 new_cache["groups"] = c_new
             if "tail" in params:
                 def rec_body(p_i, x, c_i):
-                    return _rec_block(p_i, x, cfg, cache=c_i)
+                    return _rec_block(p_i, x, cfg, cache=c_i, seq_lens=seq_lens)
                 c = cache.get("tail") if cache else None
                 x, c_new = self._scan_stack(rec_body, x, params["tail"], c)
                 if cache is not None:
@@ -316,7 +326,8 @@ class Model:
                 h = L.rms_norm(x, p_i["ln1"], cfg.norm_eps)
                 sc = c_i["self"] if c_i is not None else None
                 h, new_self = L.gqa_attention(p_i["attn"], h, cfg, mask_type="causal",
-                                              positions=positions, cache=sc)
+                                              positions=positions, cache=sc,
+                                              seq_lens=seq_lens)
                 x = x + h
                 h = L.rms_norm(x, p_i["ln_cross"], cfg.norm_eps)
                 cdt = cfg.compute_dtype
@@ -476,10 +487,18 @@ class Model:
                             self.cache_defs(batch, max_len),
                             is_leaf=lambda v: isinstance(v, ParamDef))
 
-    def prefill(self, params, batch, cache):
+    def prefill(self, params, batch, cache, lengths=None):
         """Run the prompt through the model writing the cache.
 
         Returns (last-position logits, filled cache).
+
+        ``lengths`` (B,) enables right-padded batched prefill (the serve
+        engine's bucketed admission): row r's prompt occupies
+        ``tokens[r, :lengths[r]]``, pad columns beyond it are masked out of
+        attention / recurrent state, per-row cache ``len`` vectors advance
+        by the *valid* length, and the returned logits are each row's
+        last-valid-position logits.  ``lengths == S`` for every row
+        reproduces the unpadded path value-for-value.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
@@ -491,8 +510,17 @@ class Model:
             pe = batch["patch_embeds"].astype(cfg.compute_dtype)
             x = jnp.concatenate([pe, x], axis=1)
         positions = jnp.arange(x.shape[1])
-        x, cache = self._run_layers(params, x, positions, cache)
-        logits = self._head(params, x[:, -1:])
+        seq_lens = None
+        if lengths is not None:
+            # valid length in layer coordinates includes the vlm prefix
+            seq_lens = lengths + (cfg.n_prefix if cfg.family == "vlm" else 0)
+        x, cache = self._run_layers(params, x, positions, cache,
+                                    seq_lens=seq_lens)
+        if seq_lens is None:
+            logits = self._head(params, x[:, -1:])
+        else:
+            last = jnp.take_along_axis(x, (seq_lens - 1)[:, None, None], axis=1)
+            logits = self._head(params, last)
         return logits, cache
 
     def _fill_cross(self, params, cache, enc_out):

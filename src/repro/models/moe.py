@@ -62,14 +62,22 @@ def _n_groups(cfg, n_tokens: int) -> int:
     return max(g, 1)
 
 
-def moe_ffn(p: dict, x: jax.Array, cfg, *, return_aux: bool = False):
-    """x (B, S, E_model) -> (B, S, E_model) [, aux dict]."""
+def moe_ffn(p: dict, x: jax.Array, cfg, *, return_aux: bool = False,
+            row_groups: bool = False):
+    """x (B, S, E_model) -> (B, S, E_model) [, aux dict].
+
+    ``row_groups=True`` pins one dispatch group per batch row (G = B), so
+    expert capacity is a per-row resource: row r's routing (and drops) are
+    then independent of what shares the batch.  The serve engine's batched
+    admission uses this — a k-request prefill routes each request exactly
+    as its own single-row prefill would.
+    """
     B, S, d = x.shape
     cdt = cfg.compute_dtype
     act = ACTIVATIONS[cfg.activation]
     E, k = cfg.n_experts, cfg.top_k
     N = B * S
-    G = _n_groups(cfg, N)
+    G = B if row_groups else _n_groups(cfg, N)
     n = N // G  # tokens per group
     # capacity per (group, expert)
     C = max(int(math.ceil(n * k / E * cfg.capacity_factor)), 4)

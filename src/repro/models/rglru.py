@@ -135,15 +135,23 @@ def rglru_cache_defs(cfg, batch: int, layers_prefix: Tuple[int, ...] = ()) -> di
     }
 
 
-def rglru_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
-    """Griffin recurrent block.  u (B, S, E) -> (y, new_cache)."""
+def rglru_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None,
+                seq_lens: Optional[jax.Array] = None):
+    """Griffin recurrent block.  u (B, S, E) -> (y, new_cache).
+
+    ``seq_lens`` (B,) marks each row's valid prefix under right-padded
+    batched prefill: pad steps become identity recurrence updates (a=1,
+    gated input 0 -> h_t = h_{t-1}), so the carried state h_last ignores
+    every row's padded tail.
+    """
     B, S, E = u.shape
     cdt = cfg.compute_dtype
 
     gate = jax.nn.gelu(jnp.einsum("bse,ed->bsd", u, p["w_gate_branch"].astype(cdt)))
     x = jnp.einsum("bse,ed->bsd", u, p["w_x"].astype(cdt))
     conv_state = cache["conv"] if cache is not None else None
-    x, new_conv = causal_conv1d(x, p["conv_w"].astype(cdt), conv_state)
+    x, new_conv = causal_conv1d(x, p["conv_w"].astype(cdt), conv_state,
+                                lengths=seq_lens)
     x = x + p["conv_b"].astype(cdt)
     x = logical(x, ("act_batch", "act_seq", "act_mlp"))
 
@@ -165,6 +173,10 @@ def rglru_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
     log_a = -RGLRU_C * jax.nn.softplus(p["lambda_p"]) * r_gate
     a = jnp.exp(log_a)
     gated_x = i_gate * xf
+    if seq_lens is not None:
+        valid = (jnp.arange(S)[None, :] < seq_lens[:, None])[..., None]
+        a = jnp.where(valid, a, 1.0)
+        gated_x = jnp.where(valid, gated_x, 0.0)
 
     new_cache = None
     if cache is not None and S == 1:
@@ -175,7 +187,8 @@ def rglru_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
         init = cache["h"] if cache is not None else None
         h, h_last = rglru_scan(gated_x, a, init_state=init)
         if cache is not None:
-            new_cache = {"conv": new_conv, "h": h_last, "len": cache["len"] + S}
+            adv = S if seq_lens is None else seq_lens
+            new_cache = {"conv": new_conv, "h": h_last, "len": cache["len"] + adv}
 
     y = h.astype(cdt) * gate
     out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(cdt))

@@ -157,8 +157,15 @@ def _split_in_proj(zxbcdt, cfg):
     return z, xbc, dt
 
 
-def mamba2_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
-    """u (B, S, E) -> (y, new_cache)."""
+def mamba2_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None,
+                 seq_lens: Optional[jax.Array] = None):
+    """u (B, S, E) -> (y, new_cache).
+
+    ``seq_lens`` (B,) marks each row's valid prefix under right-padded
+    batched prefill: pad steps become identity SSD updates (dt=0 -> decay 1,
+    contribution 0 — the same trick ``ssd_chunked`` uses for its own chunk
+    padding), so the carried state h_T ignores every row's padded tail.
+    """
     B, S, E = u.shape
     cdt = cfg.compute_dtype
     di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_headdim
@@ -166,9 +173,13 @@ def mamba2_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
     zxbcdt = jnp.einsum("bse,ef->bsf", u, p["in_proj"].astype(cdt))
     z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if seq_lens is not None:
+        valid = jnp.arange(S)[None, :] < seq_lens[:, None]
+        dt = jnp.where(valid[..., None], dt, 0.0)
 
     conv_state = cache["conv"] if cache is not None else None
-    xbc, new_conv = causal_conv1d(xbc, p["conv_w"].astype(cdt), conv_state)
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"].astype(cdt), conv_state,
+                                  lengths=seq_lens)
     xbc = jax.nn.silu(xbc + p["conv_b"].astype(cdt))
     x = xbc[..., :di]
     Bm = xbc[..., di : di + N]
@@ -187,7 +198,8 @@ def mamba2_block(p: dict, u: jax.Array, cfg, cache: Optional[dict] = None):
         init = cache["ssm"] if cache is not None else None
         y, hT = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk, init_state=init)
         if cache is not None:
-            new_cache = {"conv": new_conv, "ssm": hT, "len": cache["len"] + S}
+            adv = S if seq_lens is None else seq_lens
+            new_cache = {"conv": new_conv, "ssm": hT, "len": cache["len"] + adv}
 
     y = y + x * p["D"][:, None].astype(cdt)
     y = y.reshape(B, S, di)

@@ -17,16 +17,75 @@ trace.
 throughput saturates, and the knee is the last point whose marginal
 throughput gain over the previous point still exceeds ~5% — past it the
 engine only queues (TTFT and p99 climb with no tok/s to show for it).
+
+``auto_slots`` closes the loop: it turns a persisted measured curve
+(``benchmarks/loadgen_curve.py`` -> ``results/loadgen_curve.json``) into a
+slot count, so ``ScenarioMatrix(slots=("auto",))`` picks the decode batch
+width from the measured knee instead of by hand.
 """
 from __future__ import annotations
 
+import json
 import math
-from typing import Dict, List, Sequence, Tuple
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.runner.traces import Request
 
 #: marginal-throughput-gain threshold that defines saturation
 KNEE_GAIN = 0.05
+
+#: schema tag of results/loadgen_curve.json consumed by auto_slots (bumped
+#: whenever benchmarks/loadgen_curve.py changes the file layout — an old
+#: file is then *stale* and auto_slots falls back to the default)
+CURVE_SCHEMA = 2
+
+#: environment override for the curve location (tests, ad-hoc curves)
+CURVE_PATH_ENV = "REPRO_LOADGEN_CURVE"
+
+#: fallback slot count when no usable curve exists (the Scenario default)
+DEFAULT_SLOTS = 4
+
+#: autoscaler bounds and headroom: the measured width is scaled by
+#: HEADROOM/knee_load and clamped to [1, AUTO_SLOTS_MAX]
+AUTO_SLOTS_MAX = 16
+AUTO_SLOTS_HEADROOM = 1.25
+
+
+def auto_slots(arch: str, curve_path: Optional[str] = None,
+               default: int = DEFAULT_SLOTS) -> int:
+    """Knee-driven slot count for ``arch`` from the measured load curve.
+
+    Reads ``results/loadgen_curve.json`` (or ``$REPRO_LOADGEN_CURVE`` /
+    ``curve_path``), written by ``benchmarks/loadgen_curve.py`` with the
+    slot count it measured at and the batched-admission saturation knee.
+    The policy scales the measured width to the knee: a knee at offered
+    load 1.0 means the width just keeps up with the native arrival rate —
+    keep it (times ``AUTO_SLOTS_HEADROOM``); a knee below 1.0 means the
+    engine saturates under native load — scale up proportionally; a knee
+    well above 1.0 means the width is oversized — scale down.
+
+    Falls back to ``default`` on a missing file, unreadable JSON, a stale
+    schema tag, or a curve measured for a different arch — a wrong curve
+    must never silently shape another arch's matrix.
+    """
+    path = (curve_path or os.environ.get(CURVE_PATH_ENV)
+            or os.path.join("results", "loadgen_curve.json"))
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return default
+    if not isinstance(data, dict) or data.get("schema") != CURVE_SCHEMA \
+            or data.get("arch") != arch:
+        return default
+    knee = ((data.get("curves") or {}).get("batched") or {}).get("knee") or {}
+    knee_load = knee.get("knee_load") or 0.0
+    measured = data.get("slots") or 0
+    if knee_load <= 0 or measured <= 0:
+        return default
+    target = measured * AUTO_SLOTS_HEADROOM / knee_load
+    return max(1, min(AUTO_SLOTS_MAX, int(math.ceil(target))))
 
 
 def parse_split(split: str) -> Tuple[int, int]:

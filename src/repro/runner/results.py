@@ -63,7 +63,11 @@ decode latencies* (not step times) and ``runs`` is the request count:
     extra["queue_depth_mean"|"queue_depth_max"]      arrived-but-unadmitted
                                   requests sampled once per decode step
     extra["trace"]         str    load-profile name (runner/traces.py)
-    extra["slots"]         int    decode batch width (continuous batching)
+    extra["slots"]         int    decode batch width (continuous batching);
+                                  always the resolved integer — a matrix
+                                  ``slots=("auto",)`` axis entry is turned
+                                  into a measured width at expansion time
+                                  (``runner/loadgen.auto_slots``)
     extra["tokens"]        list   generated tokens per request, rid order —
                                   the serial-vs-sharded determinism witness
     extra["tokens_digest"] str    sha256 of extra["tokens"]
@@ -78,6 +82,21 @@ decode latencies* (not step times) and ``runs`` is the request count:
                                   — write it to a file and replay it with
                                   ``trace="file:PATH"`` for a byte-
                                   identical regression run
+    extra["admission"]     str    prefill policy: "batched" (one jitted
+                                  prefill per admission wave, bucketed
+                                  padded shapes) or "single" (the
+                                  one-prefill-per-request baseline)
+    extra["admit_calls"]   int    jitted prefill calls this replay made —
+                                  batched admission's headline saving over
+                                  one-call-per-request
+    extra["admit_batch_mean"|"admit_batch_max"]      requests admitted per
+                                  prefill call (mean/max over the replay);
+                                  mean 1.0 under admission="single"
+    extra["admit_shapes"]  list   distinct compiled (rows, padded_len)
+                                  prefill shapes over the ENGINE lifetime
+                                  (cumulative across replays, mirroring
+                                  the jit cache) — bounded by the bucket
+                                  grid, not by distinct prompt lengths
 
 Loadgen cells (``task="loadgen"``: a serve replay under transformed
 load — trace sharded by ``scenario.split``, virtual arrival clock scaled

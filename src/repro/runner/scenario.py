@@ -74,11 +74,14 @@ def dtype_overrides(dtype: str) -> Dict[str, Any]:
 class Scenario:
     """One cell of the execution matrix (hashable: used as a cache key).
 
-    The serving task carries two extra axes — ``slots`` (decode batch
-    rows) and ``trace`` (load-profile name, see ``runner/traces.py``) —
-    which stay inert (0 / "") on every other task.  For ``task="serve"``
-    the shared axes are reinterpreted: ``batch`` is the trace's request
-    count and ``seq`` its prompt length.
+    The serving task carries three extra axes — ``slots`` (decode batch
+    rows), ``trace`` (load-profile name, see ``runner/traces.py``) and
+    ``admission`` (prefill policy: ``"batched"`` admits every waiting
+    request of a wave in one jitted call, ``"single"`` keeps the
+    one-prefill-per-request baseline) — which stay inert (0 / "") on
+    every other task.  For ``task="serve"`` the shared axes are
+    reinterpreted: ``batch`` is the trace's request count and ``seq``
+    its prompt length.
     """
     arch: str
     task: str = "train"
@@ -90,6 +93,7 @@ class Scenario:
     trace: str = ""
     load: float = 0.0
     split: str = ""
+    admission: str = ""
 
     def __post_init__(self):
         if self.task not in TASKS:
@@ -102,11 +106,23 @@ class Scenario:
             if self.mode not in SERVE_MODES:
                 raise ValueError(f"{self.task} supports modes {SERVE_MODES}, "
                                  f"not {self.mode!r}")
+            if self.slots == "auto":
+                raise ValueError(
+                    "slots='auto' is a ScenarioMatrix axis value, resolved "
+                    "to a measured slot count at matrix expansion "
+                    "(repro.runner.loadgen.auto_slots); a bare Scenario "
+                    "needs an int")
             # normalize the serve axes so Scenario(task="serve") works bare
             if self.slots == 0:
                 object.__setattr__(self, "slots", 4)
             if not self.trace:
                 object.__setattr__(self, "trace", "uniform")
+            if not self.admission:
+                object.__setattr__(self, "admission", "batched")
+            from repro.launch.serve import ADMISSIONS
+            if self.admission not in ADMISSIONS:
+                raise ValueError(f"unknown admission {self.admission!r} "
+                                 f"(known: {ADMISSIONS})")
             if self.slots < 1:
                 raise ValueError(f"serve needs slots >= 1, got {self.slots}")
             from repro.runner.traces import (FILE_PREFIX, PROFILES,
@@ -141,9 +157,10 @@ class Scenario:
             if self.load or self.split:
                 raise ValueError("load/split are loadgen-only axes "
                                  "(use task='loadgen')")
-        elif self.slots or self.trace or self.load or self.split:
-            raise ValueError(f"slots/trace/load/split are serve/loadgen-only "
-                             f"axes (task={self.task!r})")
+        elif self.slots or self.trace or self.load or self.split \
+                or self.admission:
+            raise ValueError(f"slots/trace/load/split/admission are "
+                             f"serve/loadgen-only axes (task={self.task!r})")
         if self.task == "kernel":
             if self.mode not in KERNEL_MODES:
                 raise ValueError(f"kernel cells support modes {KERNEL_MODES}, "
@@ -166,14 +183,17 @@ class Scenario:
     @property
     def name(self) -> str:
         base = f"{self.arch}/{self.task}/b{self.batch}/s{self.seq}/{self.dtype}/{self.mode}"
+        # batched admission is the default and stays out of the name, so
+        # pre-existing serve/loadgen cell names (and skip lists) are stable
+        adm = "/adm-single" if self.admission == "single" else ""
         if self.task == "serve":
-            return f"{base}/x{self.slots}/{self.trace}"
+            return f"{base}/x{self.slots}/{self.trace}{adm}"
         if self.task == "loadgen":
             name = f"{base}/x{self.slots}/{self.trace}/L{self.load:g}"
             if self.split:
                 i, n = self.split.split("/")
                 name += f"/{i}of{n}"
-            return name
+            return name + adm
         return base
 
     def build_overrides(self) -> Dict[str, Any]:
@@ -233,12 +253,16 @@ class ScenarioMatrix:
       ("arch/task"), or a bare arch (the torchbench SKIP-set idiom for
       known-broken models).
 
-    ``slots`` / ``traces`` are the serve-only axes: they multiply out
-    only under ``task="serve"`` / ``task="loadgen"`` (every other task
-    gets exactly one scenario per (arch, batch, seq, dtype, mode) cell,
-    with the serve axes inert); ``loads`` / ``splits`` additionally
-    multiply out under ``task="loadgen"`` only — an offered-load sweep
-    over trace shards.  Serve cells silently skip modes outside
+    ``slots`` / ``traces`` / ``admissions`` are the serve-only axes: they
+    multiply out only under ``task="serve"`` / ``task="loadgen"`` (every
+    other task gets exactly one scenario per (arch, batch, seq, dtype,
+    mode) cell, with the serve axes inert); ``loads`` / ``splits``
+    additionally multiply out under ``task="loadgen"`` only — an
+    offered-load sweep over trace shards.  A slots entry may be the
+    string ``"auto"``: it is resolved per arch at expansion time from the
+    measured load curve (``repro.runner.loadgen.auto_slots``, reading
+    ``results/loadgen_curve.json``), falling back to the default width 4
+    when no usable curve exists.  Serve cells silently skip modes outside
     ``SERVE_MODES`` — a matrix mixing ``tasks=("train", "serve")`` with
     ``modes=("eager", ...)`` expands the eager cell for train only.
     ``task="kernel"`` (the autotuner's micro-bench cells, opt-in like
@@ -260,6 +284,7 @@ class ScenarioMatrix:
     traces: Sequence[str] = ("uniform",)
     loads: Sequence[float] = (1.0,)       # loadgen-only: offered-load sweep
     splits: Sequence[str] = ("",)         # loadgen-only: trace shards "i/n"
+    admissions: Sequence[str] = ("batched",)  # serve/loadgen admission policy
     filter: Sequence[str] = ()
     exclude: Sequence[str] = ()
     skip: Sequence[str] = ()
@@ -274,6 +299,16 @@ class ScenarioMatrix:
         if cached is not None and cached[0] == key:
             return cached[1]
         skip = set(self.skip)
+        slot_cache: Dict[str, int] = {}
+
+        def resolve_slots(k, arch):
+            if k != "auto":
+                return k
+            if arch not in slot_cache:
+                from repro.runner.loadgen import auto_slots
+                slot_cache[arch] = auto_slots(arch)
+            return slot_cache[arch]
+
         out: List[Scenario] = []
         for arch, task, batch, seq, dtype, mode in itertools.product(
                 self.archs, self.tasks, self.batches, self.seqs,
@@ -282,16 +317,21 @@ class ScenarioMatrix:
                 if mode not in SERVE_MODES:
                     continue      # eager/reduced-config modes are train-only
                 cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
-                                  dtype=dtype, mode=mode, slots=k, trace=t)
-                         for k, t in itertools.product(self.slots, self.traces)]
+                                  dtype=dtype, mode=mode,
+                                  slots=resolve_slots(k, arch), trace=t,
+                                  admission=adm)
+                         for k, t, adm in itertools.product(
+                             self.slots, self.traces, self.admissions)]
             elif task == "loadgen":
                 if mode not in SERVE_MODES:
                     continue      # loadgen drives the serve engine: same modes
                 cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
-                                  dtype=dtype, mode=mode, slots=k, trace=t,
-                                  load=ld, split=sp)
-                         for k, t, ld, sp in itertools.product(
-                             self.slots, self.traces, self.loads, self.splits)]
+                                  dtype=dtype, mode=mode,
+                                  slots=resolve_slots(k, arch), trace=t,
+                                  load=ld, split=sp, admission=adm)
+                         for k, t, ld, sp, adm in itertools.product(
+                             self.slots, self.traces, self.loads, self.splits,
+                             self.admissions)]
             elif task == "kernel":
                 if mode not in KERNEL_MODES:
                     continue      # kernel micro-bench cells are jit-only
