@@ -1,0 +1,73 @@
+"""Provenance-keyed nightly trajectory report over the result history.
+
+Reads NOTHING but ``ResultStore.history()`` — the append-only JSONL run
+log every ``run_matrix`` call and every ``core/ci.run_nightly`` night
+appends provenance-stamped records to — and renders the
+``repro.telemetry.history`` view of it:
+
+* one time series per (scenario name, provenance key), where the
+  provenance key is ``<commit>[+dirty]/<backend>/<host>`` from the
+  ``extra["prov_*"]`` stamps, so a laptop's cpu numbers never mix into a
+  TPU host's baseline;
+* rolling-median baselines and drift findings per series (the paper's
+  7% ``core/regression`` threshold), ranked into the same report shape
+  the profiler uses (``profiler/report.py``);
+* CSV rows per series (``benchmarks.common.emit`` contract), the human
+  table on comment lines, and the full JSON in
+  ``results/history_report.json``.
+
+    PYTHONPATH=src python -m benchmarks.history_report [--store PATH]
+        [--min-points K] [--window W]
+
+With the default store (``results/store``) a ``--fast`` suite run plus
+two ``run_nightly`` nights is already enough material for a >=2-point
+trajectory per probe cell.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, results_path
+from repro.profiler.report import format_table
+from repro.runner.results import ResultStore
+from repro.telemetry.history import trajectory
+
+
+def main(fast: bool = False, runner=None, store_path: str = "",
+         window: int = 5, min_points: int = 2) -> dict:
+    """Build + persist the trajectory report; returns the report dict.
+
+    ``fast``/``runner`` exist for the ``benchmarks.run`` table contract
+    but are unused: this report executes nothing — it only reads the
+    history log the other tables (and nightly CI) already wrote."""
+    del fast, runner
+    store = ResultStore(store_path or results_path("store"))
+    report = trajectory(store, window=window, min_points=min_points)
+    for s in report["meta"]["series"]:
+        first, last = s["first_median_us"], s["last_median_us"]
+        emit(f"history_report/{s['name']}", last or 0.0,
+             f"points={s['points']};ok={s['ok']};"
+             f"trend={s['trend']:+.1%};prov={s['provenance']}")
+    emit("history_report/series", 0.0,
+         f"n={len(report['meta']['series'])};"
+         f"drifts={len(report['findings'])};"
+         f"corrupt_lines={store.corrupt_lines}")
+    with open(results_path("history_report.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    for line in format_table(report).splitlines():
+        print(f"# {line}")
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", default="",
+                    help="ResultStore path (default results/store)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="rolling-baseline window (ok points)")
+    ap.add_argument("--min-points", type=int, default=2,
+                    help="series below this many points are omitted")
+    args = ap.parse_args()
+    main(store_path=args.store, window=args.window,
+         min_points=args.min_points)

@@ -4,6 +4,7 @@ executed through the unified ``repro.runner.BenchmarkRunner``.
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
         [--filter RE ...] [--exclude RE ...] [--isolate] [--jobs N]
         [--cluster local:N|HOST:PORT] [--profile] [--list]
+        [--trace-out PATH]
 
 ``--list`` prints the scenario names each matrix-driven table would run
 (after filter/exclude/skip selection) and exits without executing —
@@ -61,18 +62,26 @@ def main(argv=None) -> int:
                          "extra['prof_*'] (src/repro/profiler/)")
     ap.add_argument("--refresh", action="store_true",
                     help="recompile cached dry-run cells (after config/model changes)")
+    ap.add_argument("--trace-out", default="",
+                    help="trace every run_matrix call and write one "
+                         "stitched Chrome trace-event JSON (Perfetto-"
+                         "loadable) here; also prints a text flame "
+                         "summary (src/repro/telemetry/)")
     args = ap.parse_args(argv)
 
     from benchmarks import (batchsize, fig5_hardware, fig12_breakdown,
-                            fig34_compilers, loadgen_curve, profile_report,
-                            roofline, runner_bench, serve_latency,
-                            table1_suite, table45_ci)
+                            fig34_compilers, history_report, loadgen_curve,
+                            profile_report, roofline, runner_bench,
+                            serve_latency, table1_suite, table45_ci)
     from benchmarks.common import make_runner
     runner = make_runner(isolate=args.isolate, jobs=args.jobs,
                          cluster=args.cluster, profile=args.profile)
     runner.default_filter = tuple(args.filter)
     runner.default_exclude = tuple(args.exclude)
     runner.dryrun_refresh = args.refresh
+    if args.trace_out:
+        from repro.telemetry.spans import Tracer
+        runner.tracer = Tracer()
     tables = {
         "table1_suite": table1_suite.main,         # Table 1 + coverage (§2.3)
         "fig12_breakdown": fig12_breakdown.main,   # Figs 1-2 + Table 2
@@ -85,6 +94,7 @@ def main(argv=None) -> int:
         "loadgen_curve": loadgen_curve.main,       # TTFT/p99 vs offered load
         "profile_report": profile_report.main,     # measured inefficiency findings
         "runner_bench": runner_bench.main,         # runner reuse speedup
+        "history_report": history_report.main,     # provenance trajectories
     }
     if args.list:
         # sharded-sweep debugging: show exactly which cells each table's
@@ -118,6 +128,15 @@ def main(argv=None) -> int:
                 print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr, flush=True)
     finally:
         runner.close()
+    if args.trace_out and runner.tracer.spans:
+        from repro.telemetry.export import flame_summary, save_trace
+        save_trace(runner.tracer.export(), args.trace_out)
+        print(f"# trace: {len(runner.tracer.spans)} spans -> "
+              f"{args.trace_out}", flush=True)
+        print("\n".join("# " + ln for ln in
+                        flame_summary(runner.tracer.spans,
+                                      max_depth=4).splitlines()),
+              flush=True)
     print(f"# runner stats: {runner.stats.to_dict()}", flush=True)
     return 1 if failed else 0
 

@@ -73,6 +73,16 @@ one-prefill-per-request baseline).  Reported: the TTFT p99 ratio, the
 jitted prefill-call counts, and the token-digest equality gate — batched
 admission must be a pure scheduling change, byte-identical tokens.
 
+Part 8 — cluster capacity pipelining: the same single-build-key matrix
+dispatched to ONE cluster worker at ``--capacity 1`` (strict
+request/response round trips) and ``--capacity 2`` (the coordinator
+keeps two cells of the group in flight, so protocol latency + result
+marshalling overlap the worker's compute).  The capacity-2 run is span-
+traced end to end and the stitched Chrome trace is persisted as the
+*explanatory artifact* (``results/capacity_trace.json``): the wall-clock
+ratio says whether pipelining pays, the trace shows exactly where —
+dispatch spans overlapping on the coordinator lane vs back-to-back.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -171,7 +181,7 @@ def _serve_matrix(fast: bool) -> ScenarioMatrix:
 def scenario_matrices(fast: bool = False):
     """The matrices this benchmark executes (``benchmarks.run --list`` hook)."""
     return [_sweep_matrix(fast), _serve_matrix(fast), _skew_matrix(fast),
-            _tuning_matrix(fast)]
+            _tuning_matrix(fast), _capacity_matrix(fast)]
 
 
 # ---- part 6: kernel autotuning --------------------------------------------
@@ -194,6 +204,45 @@ def _tuning_candidates(fast: bool) -> int:
 def _tuning_matrix(fast: bool) -> ScenarioMatrix:
     return sweep_matrix(_tuning_cases(fast),
                         max_candidates=_tuning_candidates(fast))
+
+
+# ---- part 8: cluster capacity pipelining ----------------------------------
+
+def _capacity_matrix(fast: bool) -> ScenarioMatrix:
+    """One build-key group of several cheap cells: a single worker owns
+    the whole group, so any wall-clock gap between capacity 1 and 2 is
+    pure dispatch pipelining (not scheduling or cache effects)."""
+    return ScenarioMatrix(archs=[ARCH], tasks=("train", "infer_decode"),
+                          batches=(1, 2), seqs=(8 if fast else 16,))
+
+
+def capacity_path(matrix: ScenarioMatrix, *, capacity: int,
+                  tracer=None) -> float:
+    """Wall time of the matrix through one ``local:1`` cluster worker
+    advertising ``capacity`` in-flight cells; optionally span-traced."""
+    from repro.runner.cluster.scheduler import ClusterScheduler
+    from repro.telemetry.spans import NULL_TRACER
+    tr = tracer or NULL_TRACER
+    sched = ClusterScheduler("local:1", runs=1, warmup=0, compile_warmup=0,
+                             measure_fence=False, capacity=capacity)
+    t0 = time.perf_counter()
+    try:
+        root = None
+        if tr.enabled:
+            tr.begin_trace()
+            root = tr.start("matrix", kind="matrix", cells=len(matrix),
+                            transport=f"cluster:local:1;capacity={capacity}")
+        results, _ = sched.run(matrix.expand(), hooks={}, tracer=tracer,
+                               trace_parent=root)
+        if root is not None:
+            tr.finish(root)
+    finally:
+        sched.close()
+    wall = time.perf_counter() - t0
+    bad = [rr for rr in results if rr.status != "ok"]
+    if bad:
+        raise RuntimeError(f"{bad[0].name}: {bad[0].error}")
+    return wall
 
 
 # ---- part 5: static LPT vs stealing vs cluster ----------------------------
@@ -427,6 +476,24 @@ def main(fast: bool = False, runner=None) -> None:
          f"vs{adm_cells['single']['prefill_calls']};"
          f"batch_max={adm_cells['batched']['admit_batch_max']}")
 
+    # cluster capacity pipelining: one worker, strict round trips vs two
+    # cells in flight; the traced capacity-2 run is the explanatory
+    # artifact (see module docstring, part 8)
+    from repro.telemetry.export import save_trace
+    from repro.telemetry.spans import Tracer
+    cap_matrix = _capacity_matrix(fast)
+    cap1_s = capacity_path(cap_matrix, capacity=1)
+    cap_tracer = Tracer()
+    cap2_s = capacity_path(cap_matrix, capacity=2, tracer=cap_tracer)
+    cap_trace_path = results_path("capacity_trace.json")
+    save_trace(cap_tracer.export(), cap_trace_path)
+    cap_ratio = cap1_s / cap2_s if cap2_s else 0.0
+    emit("runner_bench/capacity1_s", cap1_s * 1e6,
+         f"local:1;{len(cap_matrix)}_cells")
+    emit("runner_bench/capacity2_s", cap2_s * 1e6,
+         f"local:1;pipelined;trace={cap_trace_path}")
+    emit("runner_bench/capacity_pipelining_win", 0.0, f"{cap_ratio:.2f}x")
+
     with open(results_path("runner_bench.json"), "w") as f:
         json.dump({"scenarios": [s.name for s in scenarios], "runs": runs,
                    "seed_path_s": seed_s, "runner_path_s": runner_s,
@@ -454,6 +521,12 @@ def main(fast: bool = False, runner=None) -> None:
                    "admission": {"cells": adm_cells,
                                  "digests_match": adm_digest_ok,
                                  "ttft_p99_ratio": adm_ttft_ratio},
+                   "capacity": {"cells": [s.name for s in cap_matrix],
+                                "capacity1_s": cap1_s,
+                                "capacity2_s": cap2_s,
+                                "pipelining_win": cap_ratio,
+                                "trace_path": str(cap_trace_path),
+                                "trace_spans": len(cap_tracer.spans)},
                    "tuning": {"jobs": JOBS, "wall_s": tuning_wall,
                               "db_path": tuning["db_path"],
                               "cases": tuning["cases"],

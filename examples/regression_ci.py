@@ -1,8 +1,27 @@
-"""The paper's CI use case (§4.2) end-to-end: nightly suite run, baseline
-store, an injected "bad commit", detection at the 7% threshold, and binary-
-search bisection to the culprit.
+"""The paper's CI use case (§4.2) end-to-end, on the provenance-keyed
+nightly workflow: nightly suite run, baseline store, an injected "bad
+commit", detection at the 7% threshold, and binary-search bisection to
+the culprit.
 
     PYTHONPATH=src python examples/regression_ci.py [--jobs N]
+
+Each ``run_nightly`` call does two things with the ``MetricStore``:
+
+* ``update``/``detect`` against the **baseline pointer** — the paper's
+  original latest-vs-baseline check, unchanged; and
+* ``log_result`` every measured record into the **history log** as a
+  provenance-stamped time-series point (``extra["prov_commit"]``,
+  backend, host... — see ``repro/runner/results.py``), WITHOUT moving
+  the baseline pointer.
+
+The second stream is what ``repro.telemetry.history`` consumes: points
+group into one series per (scenario, provenance key), so night-over-
+night trajectories never mix commits, backends, or hosts — a laptop
+rerun of the suite lands in its own series instead of polluting the CI
+host's rolling baseline.  After the two nights below, the trajectory
+report (rendered at the end, same machinery as
+``benchmarks/history_report.py``) shows a >=2-point series per probe
+cell with the injected regression visible as its drift finding.
 
 ``--jobs N`` shards each night's matrix across N persistent worker
 subprocesses (the injected hooks cross the process boundary as plain
@@ -84,6 +103,14 @@ def _ci_day(store, archs, runner) -> int:
         print(" ", t)
     print(f"culprit: {culprit.sha} (found with {len(trace)} measurements of 12 commits)")
     assert culprit.sha == "c08"
+
+    print("\n== provenance-keyed nightly trajectory ==")
+    from repro.profiler.report import format_table  # noqa: E402
+    from repro.telemetry.history import trajectory  # noqa: E402
+    traj = trajectory(store, min_points=2)
+    for line in format_table(traj).splitlines():
+        print(" ", line)
+    assert traj["meta"]["series"], "expected >=2-point provenance series"
     print(f"runner stats: {runner.stats.to_dict()}")
     return 0
 

@@ -15,16 +15,22 @@ whether compute, data movement, dispatch, or idle moved):
 
     PYTHONPATH=src python scripts/dump_cell.py --profile --arch gemma-2b
         [--task train] [--batch 2] [--seq 32] [--dtype fp32]
-        [--mode jit_donated] [--runs 3] [--json-out prof.json]
+        [--mode jit_donated] [--runs 3] [--json-out prof.json] [--trace]
+
+``--trace`` (measured mode, implies a measured process like --profile)
+additionally span-traces the cell and prints its span tree — the
+build/compile/warm/measure timeline of exactly this run, same spans a
+``benchmarks.run --trace-out`` Chrome trace would show.
 
 The two modes need incompatible processes: the dry run forces 512
 placeholder host devices via XLA_FLAGS *before* jax initializes, while a
 measured run must keep the single real device — so the dryrun module is
-imported only on the dry-run path.
+imported only on the dry-run path (``--trace`` alone also selects the
+measured process).
 """
 import sys
 
-_PROFILE_MODE = "--profile" in sys.argv
+_PROFILE_MODE = "--profile" in sys.argv or "--trace" in sys.argv
 
 if not _PROFILE_MODE:
     import os
@@ -41,10 +47,13 @@ def profile_cell(args) -> dict:
     sc = Scenario(arch=args.arch, task=args.task, batch=args.batch,
                   seq=args.seq, dtype=args.dtype, mode=args.mode)
     runner = BenchmarkRunner(runs=args.runs)
-    rr = runner.run(sc, record=False, profile=True)
+    if args.trace:
+        from repro.telemetry.spans import Tracer
+        runner.tracer = Tracer()
+    rr = runner.run(sc, record=False, profile=args.profile)
     if rr.status != "ok":
         raise SystemExit(f"{sc.name}: {rr.status}: {rr.error}")
-    return {
+    payload = {
         "scenario": sc.to_dict(),
         "name": rr.name,
         "median_us": rr.median_us,
@@ -53,6 +62,9 @@ def profile_cell(args) -> dict:
         "profile": {k: v for k, v in rr.extra.items()
                     if k.startswith("prof_")},
     }
+    if args.trace:
+        payload["spans"] = runner.tracer.export()
+    return payload
 
 
 def profile_main(args) -> None:
@@ -62,12 +74,18 @@ def profile_main(args) -> None:
         with open(args.json_out, "w") as f:
             f.write(text + "\n")
     print(text)
+    if args.trace:
+        from repro.telemetry.export import flame_summary
+        print("# span tree:", file=sys.stderr)
+        for ln in flame_summary(payload["spans"]).splitlines():
+            print(f"#   {ln}", file=sys.stderr)
     prof = payload["profile"]
     fr = {k.replace("prof_frac_", ""): v for k, v in prof.items()
           if k.startswith("prof_frac_")}
-    print(f"# {payload['name']}: median {payload['median_us']:.0f}us | "
-          + " ".join(f"{k}={v:.2f}" for k, v in sorted(fr.items()))
-          + f" (sum {sum(fr.values()):.3f})", file=sys.stderr)
+    if fr:
+        print(f"# {payload['name']}: median {payload['median_us']:.0f}us | "
+              + " ".join(f"{k}={v:.2f}" for k, v in sorted(fr.items()))
+              + f" (sum {sum(fr.values()):.3f})", file=sys.stderr)
 
 
 def dryrun_main(args) -> None:
@@ -187,8 +205,11 @@ def main():
     ap.add_argument("--runs", type=int, default=3)
     ap.add_argument("--json-out", default=None,
                     help="also write the profile JSON here")
+    ap.add_argument("--trace", action="store_true",
+                    help="measured mode: span-trace the cell and print "
+                         "its build/compile/warm/measure span tree")
     args = ap.parse_args()
-    if args.profile:
+    if args.profile or args.trace:
         profile_main(args)
     else:
         if not args.shape:

@@ -217,4 +217,56 @@ EOF
 echo "== tuning queue drain: profile_report --drain-queue (serial) =="
 python -m benchmarks.profile_report --drain-queue
 
+echo "== trace gate: 1-cell profiled run exports a well-formed Chrome trace =="
+python -m benchmarks.run --fast --only table1_suite \
+    --filter '^gemma-2b/train/' --profile \
+    --trace-out results/smoke_trace.json
+python - <<'EOF'
+import json
+
+with open("results/smoke_trace.json") as f:
+    trace = json.load(f)
+events = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+assert events, "no complete events in trace"
+by_id = {e["args"]["span_id"]: e for e in events}
+cells = [e for e in events if e["args"].get("kind") == "cell"]
+assert cells, "no cell spans in trace"
+for cell in cells:
+    kids = [e for e in events
+            if e["args"].get("parent") == cell["args"]["span_id"]
+            and e["args"].get("kind") == "phase"]
+    assert kids, f"cell {cell['name']} has no phase children"
+    cover = sum(k["dur"] for k in kids) / cell["dur"]
+    print(f"  {cell['name']}: {len(kids)} phases cover {cover:.1%}")
+    assert cover >= 0.95, f"{cell['name']}: phases cover only {cover:.1%}"
+print("trace gate OK")
+EOF
+
+echo "== history gate: two nightly probes -> 2-point provenance series =="
+python - <<'EOF'
+import os
+import tempfile
+
+from repro.core.ci import run_nightly
+from repro.core.regression import MetricStore
+from repro.runner import BenchmarkRunner
+from repro.telemetry.history import series
+
+store = MetricStore(os.path.join(tempfile.mkdtemp(prefix="smoke_hist_"),
+                                 "metrics.json"))
+probe = dict(archs=["gemma-2b"], tasks=("train",), batches=(1,), seqs=(8,),
+             runs=2)
+runner = BenchmarkRunner(runs=2)
+try:
+    run_nightly(store, update_baseline=True, runner=runner, **probe)
+    run_nightly(store, runner=runner, **probe)
+finally:
+    runner.close()
+two_point = {k: pts for k, pts in series(store).items() if len(pts) >= 2}
+assert two_point, "no 2-point provenance series after two nights"
+for (name, prov), pts in sorted(two_point.items()):
+    print(f"  {name} [{prov}]: {len(pts)} points")
+print("history gate OK")
+EOF
+
 echo "smoke OK"

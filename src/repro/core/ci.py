@@ -41,7 +41,13 @@ def run_nightly(store: MetricStore, *, archs: Optional[List[str]] = None,
     (defaults to the runner's own ``jobs`` setting); the persistent pool
     keeps worker caches warm across repeated nights.  ``batches``/``seqs``
     pick the probe cells — noisy shared hosts want small ones, so an
-    injected regression dwarfs host jitter."""
+    injected regression dwarfs host jitter.
+
+    Every measured result (ok or error, baseline night or not) is also
+    appended to the store's history log as a provenance-stamped
+    time-series point (``MetricStore.log_result``) — the raw material
+    ``repro.telemetry.history`` turns into per-environment nightly
+    trajectories — without touching the baseline pointer."""
     t0 = time.perf_counter()
     issues: List[Issue] = []
     owned = runner is None      # close what we create (shard workers!)
@@ -52,6 +58,7 @@ def run_nightly(store: MetricStore, *, archs: Optional[List[str]] = None,
     try:
         for rr in runner.run_matrix(matrix, hooks=hooks, runs=runs, jobs=jobs):
             ran += 1
+            store.log_result(rr)
             if rr.status != "ok":
                 issues.append(Issue(benchmark=rr.bench, metric="status",
                                     baseline=0.0, observed=0.0, increase=0.0,

@@ -118,7 +118,8 @@ def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] =
             hook: Optional[RegressionHook] = None,
             jitted: Optional[Callable] = None,
             final_args: Optional[list] = None,
-            phase_log: Optional[list] = None) -> Measurement:
+            phase_log: Optional[list] = None,
+            events: Optional[list] = None) -> Measurement:
     """Paper protocol: median-of-N timing of the jitted computation phase.
 
     ``jitted`` lets a caller (the BenchmarkRunner) reuse an already-compiled
@@ -132,22 +133,37 @@ def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] =
     split costs one extra ``perf_counter`` read per step and is taken only
     when a log is passed, so unprofiled measurements are byte-identical to
     the pre-profiler protocol.
+
+    ``events`` (a mutable list) is the tracing hook: it receives one
+    ``(phase, wall_t0, wall_t1)`` tuple per protocol phase — "compile"
+    (first jitted call + ready wait), "warm" (the warmup prefix of the
+    loop) and "measure" (the timed iterations).  Wall-clock boundaries
+    are read only when a list is passed, so untraced measurements pay
+    nothing.
     """
     gc.collect()
     dev0 = _live_device_bytes()
     if jitted is None:
         jitted = prepare(step_fn, donate)
     # compile (excluded from the measured region, reported separately)
+    tw = time.time() if events is not None else 0.0
     t0 = time.perf_counter()
     out = jitted(*args)
     jax.block_until_ready(out)
     compile_us = (time.perf_counter() - t0) * 1e6
     # donation-aware steady state: thread state through when donated
     cur_args = _thread(out, args, donate)
+    if events is not None:
+        t_phase = time.time()
+        events.append(("compile", tw, t_phase))
 
     tracemalloc.start()
     times = []
     for i in range(warmup + runs):
+        if events is not None and i == warmup:
+            now = time.time()
+            events.append(("warm", t_phase, now))
+            t_phase = now
         t0 = time.perf_counter()
         out = jitted(*cur_args)
         t_disp = time.perf_counter() if phase_log is not None else 0.0
@@ -162,6 +178,8 @@ def measure(name: str, step_fn: Callable, args: Tuple, donate: Tuple[int, ...] =
             if phase_log is not None:
                 phase_log.append((t_disp - t0, t_done - t_disp))
         cur_args = _thread(out, cur_args, donate)
+    if events is not None:
+        events.append(("measure", t_phase, time.time()))
     _, host_peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
     if final_args is not None:

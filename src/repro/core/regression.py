@@ -68,6 +68,14 @@ class MetricStore:
         """Replay every baseline this benchmark ever recorded (JSONL log)."""
         return self._store.history(benchmark)
 
+    def log_result(self, result) -> dict:
+        """Append one full ``RunResult`` to the history log WITHOUT moving
+        the latest pointer: a provenance-keyed time-series point
+        (``repro.telemetry.history`` groups these into per-environment
+        trajectories), not a new baseline — ``data``/``baseline`` views
+        stay exactly what ``update`` last wrote."""
+        return self._store.append(result, advance_latest=False)
+
 
 def detect(store: MetricStore, benchmark: str, observed: Dict[str, float],
            *, threshold: float = THRESHOLD,

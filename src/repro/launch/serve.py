@@ -241,7 +241,8 @@ class ServeEngine:
         return self._decode.lower(self.params, toks, self.cache)
 
     def run(self, requests: List[Request], *, hook=None,
-            phase_log: Optional[list] = None) -> Dict[str, Any]:
+            phase_log: Optional[list] = None,
+            span_log: Optional[list] = None) -> Dict[str, Any]:
         """Replay a trace; returns throughput + raw latency samples.
 
         Admission is driven by the decode-step counter (virtual time):
@@ -256,6 +257,10 @@ class ServeEngine:
         ``phase_log`` is the profiler hook: one ``(dispatch_s, device_s)``
         tuple per batched decode step — the split is taken only when a log
         is passed, so unprofiled replays keep the pre-profiler timing.
+        ``span_log`` is the tracing hook: one ``(name, wall_t0, wall_t1)``
+        tuple per admission wave ("admit_wave") and batched decode step
+        ("decode_step"); wall-clock reads happen only when a list is
+        passed, so untraced replays pay nothing.
         """
         self._reset()
         shapes0 = len(self._admit_shapes)
@@ -291,7 +296,11 @@ class ServeEngine:
                 pairs = list(zip(free, waiting))
                 if pairs:
                     del waiting[: len(pairs)]
+                    tw = time.time() if span_log is not None else 0.0
                     firsts = self._admit_wave(pairs)
+                    if span_log is not None:
+                        span_log.append(("admit_wave", tw, time.time(),
+                                         {"requests": len(pairs)}))
                     tnow = time.perf_counter()
                     for (s, req), tok in zip(pairs, firsts):
                         req.out.append(tok)
@@ -320,11 +329,14 @@ class ServeEngine:
                         f"position {int(self.slot_pos[s])} with max_len "
                         f"{self.max_len} — size the engine with "
                         f"traces.cache_len_bound() for the trace")
+            tw = time.time() if span_log is not None else 0.0
             ts = time.perf_counter()
             toks = jnp.asarray(next_tok[:, None])
             logits, self.cache = self._decode(self.params, toks, self.cache)
             t_disp = time.perf_counter() if phase_log is not None else 0.0
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            if span_log is not None:
+                span_log.append(("decode_step", tw, time.time()))
             if phase_log is not None:
                 # dispatch ends when the async decode call returns; the
                 # argmax readback above forced the device sync

@@ -41,6 +41,8 @@ from repro.runner.pool import rank_groups
 from repro.runner.protocol import Channel, job_message, stats_delta
 from repro.runner.results import RunResult
 from repro.runner.scenario import Scenario
+from repro.telemetry.provenance import stamp as stamp_provenance
+from repro.telemetry.spans import NULL_TRACER, Tracer, group_label
 
 
 class _WorkerConn:
@@ -60,6 +62,7 @@ class _WorkerConn:
         # its in-flight cells (index -> dispatch time, for deadlines)
         self.group: List[int] = []
         self.inflight: Dict[int, float] = {}
+        self.gspan = None              # open group span (traced runs)
 
     def ident(self) -> str:
         return self.host or self.addr
@@ -84,6 +87,12 @@ class Coordinator:
         self.connect_timeout = connect_timeout
         self._conns: List[_WorkerConn] = []
         self._closed = False
+        # per-run tracing state (set by run(); defaults keep every path
+        # trace-free when the caller passed no tracer)
+        self._tr: Tracer = NULL_TRACER
+        self._troot = None
+        self._extras: Dict[str, dict] = {}
+        self._dspans: Dict[int, object] = {}   # cell idx -> dispatch span
 
     # ---- lifecycle -------------------------------------------------------
 
@@ -125,12 +134,25 @@ class Coordinator:
             hooks: Optional[dict] = None,
             runs: Optional[int] = None, warmup: Optional[int] = None,
             profile: bool = False,
-            on_result: Optional[Callable[[RunResult], None]] = None):
+            on_result: Optional[Callable[[RunResult], None]] = None,
+            tracer: Optional[Tracer] = None, trace_parent=None,
+            extras: Optional[Dict[str, dict]] = None):
         """Run every scenario across the connected workers; returns
         ``(results_in_input_order, run_stats)``.  Results carry
         ``extra["host"]`` (the worker's registered host id) and
-        ``extra["isolated"]`` — see ``runner/results.py``."""
+        ``extra["isolated"]`` — see ``runner/results.py``.
+
+        ``tracer``/``trace_parent`` stitch the dispatch into the caller's
+        trace exactly like the pool: one ``group:`` span per stolen group
+        (on the owning worker's connection), one ``dispatch:`` span per
+        cell whose context rides the job so the worker's spans come back
+        nested under it.  ``extras`` maps scenario name -> extra dict
+        forwarded with each job."""
         from repro.runner.runner import RunnerStats
+        self._tr = tracer or NULL_TRACER
+        self._troot = trace_parent
+        self._extras = extras or {}
+        self._dspans = {}
         queue: Deque[List[int]] = collections.deque(
             list(idxs) for idxs, _ in rank_groups(scenarios))
         results: List[Optional[RunResult]] = [None] * len(scenarios)
@@ -161,6 +183,17 @@ class Coordinator:
                 # every worker is gone and nobody reconnected: error out
                 # the remaining cells instead of hanging the sweep
                 self._drain_unrunnable(queue, ctx, results, run_stats, done)
+        if self._tr.enabled:
+            # seal whatever is still open (groups whose tail just finished,
+            # dispatch slots orphaned by an off-protocol worker)
+            for conn in self._conns:
+                if conn.gspan is not None:
+                    self._tr.finish(conn.gspan)
+                    conn.gspan = None
+            for ds in self._dspans.values():
+                ds.set(error="unresolved at run end")
+                self._tr.finish(ds)
+            self._dspans = {}
         return [r for r in results if r is not None], run_stats
 
     def _poll(self, wait: float, queue, ctx, results, run_stats,
@@ -256,6 +289,13 @@ class Coordinator:
         delta = stats_delta(msg.get("stats"), conn.stats_seen)
         if delta:
             run_stats.merge(delta)
+        ds = self._dspans.pop(idx, None)
+        if ds is not None:
+            self._tr.ingest(msg.get("spans"), proc=conn.ident())
+            ds.set(status=rr.status)
+            self._tr.finish(ds)
+            rr.extra.setdefault("span_trace", self._tr.trace_id)
+            rr.extra["span_dispatch"] = ds.span_id
         self._finish(conn.ident(), idx, rr, results, done, on_result)
         self._feed(conn, queue, ctx)
 
@@ -264,6 +304,15 @@ class Coordinator:
         if host:
             rr.extra["host"] = host
         rr.extra["isolated"] = True
+        # backstop for records the worker never produced (retire/drain
+        # errors): dispatch-side extras + coordinator provenance.  Worker
+        # results arrive already annotated/stamped; setdefault keeps the
+        # worker's (correct-host) values
+        ex = self._extras.get(rr.name)
+        if ex:
+            for k, v in ex.items():
+                rr.extra.setdefault(k, v)
+        stamp_provenance(rr)
         results[idx] = rr
         done[0] += 1
         try:
@@ -283,19 +332,37 @@ class Coordinator:
                 if not queue:
                     return
                 conn.group = queue.popleft()    # steal the next group
+                if self._tr.enabled:
+                    if conn.gspan is not None:
+                        self._tr.finish(conn.gspan)
+                    key = scenarios[conn.group[0]].build_key()
+                    conn.gspan = self._tr.start(
+                        "group:" + group_label(key), parent=self._troot,
+                        kind="group", host=conn.ident(),
+                        cells=len(conn.group))
             idx = conn.group.pop(0)
             sc = scenarios[idx]
             hook = hooks.get(sc.name) or hooks.get(sc.bench)
+            ds = None
+            if self._tr.enabled:
+                ds = self._tr.start("dispatch:" + sc.name, kind="dispatch",
+                                    parent=conn.gspan, cell=sc.name,
+                                    host=conn.ident())
             try:
                 conn.chan.send(job_message(sc, runs=runs, warmup=warmup,
                                            profile=profile, hook=hook,
-                                           cell=idx))
+                                           cell=idx,
+                                           trace=self._tr.context(ds),
+                                           extra=self._extras.get(sc.name)))
             except OSError:
                 # send failed: the cell was never dispatched — put it back
-                # and let _reap_failures retire the connection
+                # and let _reap_failures retire the connection (the unsent
+                # dispatch span is simply dropped: never recorded)
                 conn.group.insert(0, idx)
                 conn.chan.eof = True
                 return
+            if ds is not None:
+                self._dspans[idx] = ds
             conn.inflight[idx] = time.monotonic()
 
     # ---- failure handling ------------------------------------------------
@@ -344,8 +411,17 @@ class Coordinator:
                                       wall_s=now - t0)
             run_stats.scenarios_run += 1
             run_stats.errors += 1
+            ds = self._dspans.pop(idx, None)
+            if ds is not None:
+                ds.set(status="error", error=reason[:200])
+                self._tr.finish(ds)
+                rr.extra.setdefault("span_trace", self._tr.trace_id)
+                rr.extra["span_dispatch"] = ds.span_id
             self._finish(conn.ident(), idx, rr, results, done, on_result)
         conn.inflight = {}
+        if conn.gspan is not None:
+            self._tr.finish(conn.gspan)
+            conn.gspan = None
         if conn.group:
             queue.appendleft(conn.group)        # re-stolen next
             conn.group = []

@@ -55,7 +55,7 @@ class ClusterScheduler:
                  compile_warmup: int = 3, reuse: bool = True,
                  measure_fence: bool = True, timeout: float = 1200.0,
                  heartbeat_timeout: float = 30.0,
-                 connect_timeout: float = 120.0):
+                 connect_timeout: float = 120.0, capacity: int = 1):
         self.spec = spec
         kind, val = parse_cluster_spec(spec)
         bind = "127.0.0.1:0" if kind == "local" else val
@@ -72,6 +72,12 @@ class ClusterScheduler:
                     "--connect", self.coordinator.address,
                     "--runs", str(runs), "--warmup", str(warmup),
                     "--compile-warmup", str(compile_warmup)]
+            if capacity > 1:
+                # pipelined dispatch: the worker advertises capacity K at
+                # register time, so the coordinator keeps K cells of its
+                # group in flight (benchmarks/runner_bench.py part 8
+                # measures what that pipelining buys)
+                argv += ["--capacity", str(capacity)]
             if not reuse:
                 argv.append("--no-reuse")
             if measure_fence and reuse:
@@ -165,13 +171,17 @@ class ClusterScheduler:
             hooks: Optional[dict] = None,
             runs: Optional[int] = None, warmup: Optional[int] = None,
             profile: bool = False,
-            on_result: Optional[Callable[[RunResult], None]] = None):
+            on_result: Optional[Callable[[RunResult], None]] = None,
+            tracer=None, trace_parent=None, extras=None):
         """Dispatch one batch through the coordinator; returns
         ``(results_in_input_order, run_stats)`` — same contract as
-        ``ShardScheduler.run``, with ``extra["host"]`` instead of
-        ``extra["shard"]`` on every record."""
+        ``ShardScheduler.run`` (including the tracer/extras stitching
+        knobs), with ``extra["host"]`` instead of ``extra["shard"]`` on
+        every record."""
         if self.procs:
             self._respawn_dead()
         return self.coordinator.run(scenarios, hooks=hooks, runs=runs,
                                     warmup=warmup, profile=profile,
-                                    on_result=on_result)
+                                    on_result=on_result, tracer=tracer,
+                                    trace_parent=trace_parent,
+                                    extras=extras)

@@ -31,6 +31,7 @@ import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.runner.traces import Request
+from repro.telemetry.spans import warn
 
 #: marginal-throughput-gain threshold that defines saturation
 KNEE_GAIN = 0.05
@@ -52,6 +53,47 @@ AUTO_SLOTS_MAX = 16
 AUTO_SLOTS_HEADROOM = 1.25
 
 
+def auto_slots_info(arch: str, curve_path: Optional[str] = None,
+                    default: int = DEFAULT_SLOTS) -> Tuple[int, str]:
+    """``(slots, fallback_reason)`` for ``arch`` from the measured curve.
+
+    The reason is ``""`` when the knee policy actually ran, else one of
+    ``"missing"`` (no curve file), ``"unreadable"`` (exists but not valid
+    JSON), ``"stale-schema"`` (written by an older
+    ``benchmarks/loadgen_curve.py`` layout), ``"foreign-arch"`` (curve
+    measured for a different arch) or ``"degenerate-curve"`` (no usable
+    knee/slot numbers).  Every fallback emits one structured
+    ``telemetry.warn("slots_fallback", ...)`` line — a stale curve
+    silently shaping a matrix is exactly the failure this surfaces.
+    """
+    path = (curve_path or os.environ.get(CURVE_PATH_ENV)
+            or os.path.join("results", "loadgen_curve.json"))
+
+    def fallback(reason: str) -> Tuple[int, str]:
+        warn("slots_fallback", arch=arch, path=path, reason=reason,
+             slots=default)
+        return default, reason
+
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+    except OSError:
+        return fallback("missing")
+    except ValueError:
+        return fallback("unreadable")
+    if not isinstance(data, dict) or data.get("schema") != CURVE_SCHEMA:
+        return fallback("stale-schema")
+    if data.get("arch") != arch:
+        return fallback("foreign-arch")
+    knee = ((data.get("curves") or {}).get("batched") or {}).get("knee") or {}
+    knee_load = knee.get("knee_load") or 0.0
+    measured = data.get("slots") or 0
+    if knee_load <= 0 or measured <= 0:
+        return fallback("degenerate-curve")
+    target = measured * AUTO_SLOTS_HEADROOM / knee_load
+    return max(1, min(AUTO_SLOTS_MAX, int(math.ceil(target)))), ""
+
+
 def auto_slots(arch: str, curve_path: Optional[str] = None,
                default: int = DEFAULT_SLOTS) -> int:
     """Knee-driven slot count for ``arch`` from the measured load curve.
@@ -67,25 +109,12 @@ def auto_slots(arch: str, curve_path: Optional[str] = None,
 
     Falls back to ``default`` on a missing file, unreadable JSON, a stale
     schema tag, or a curve measured for a different arch — a wrong curve
-    must never silently shape another arch's matrix.
+    must never silently shape another arch's matrix.  The fallback is
+    *not* silent: ``auto_slots_info`` (this function's implementation)
+    names the reason in a structured warning, and ``ScenarioMatrix``
+    forwards it to the affected cells as ``extra["slots_fallback"]``.
     """
-    path = (curve_path or os.environ.get(CURVE_PATH_ENV)
-            or os.path.join("results", "loadgen_curve.json"))
-    try:
-        with open(path, encoding="utf-8") as f:
-            data = json.load(f)
-    except (OSError, ValueError):
-        return default
-    if not isinstance(data, dict) or data.get("schema") != CURVE_SCHEMA \
-            or data.get("arch") != arch:
-        return default
-    knee = ((data.get("curves") or {}).get("batched") or {}).get("knee") or {}
-    knee_load = knee.get("knee_load") or 0.0
-    measured = data.get("slots") or 0
-    if knee_load <= 0 or measured <= 0:
-        return default
-    target = measured * AUTO_SLOTS_HEADROOM / knee_load
-    return max(1, min(AUTO_SLOTS_MAX, int(math.ceil(target))))
+    return auto_slots_info(arch, curve_path, default)[0]
 
 
 def parse_split(split: str) -> Tuple[int, int]:

@@ -60,6 +60,8 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 from repro.runner.protocol import Channel, job_message, stats_delta
 from repro.runner.results import RunResult
 from repro.runner.scenario import Scenario
+from repro.telemetry.provenance import stamp as stamp_provenance
+from repro.telemetry.spans import NULL_TRACER, Tracer, group_label
 
 
 def _src_dir() -> str:
@@ -289,7 +291,9 @@ class ShardScheduler:
             runs: Optional[int] = None, warmup: Optional[int] = None,
             profile: bool = False,
             on_result: Optional[Callable[[RunResult], None]] = None,
-            steal: Optional[bool] = None):
+            steal: Optional[bool] = None,
+            tracer: Optional[Tracer] = None, trace_parent=None,
+            extras: Optional[Dict[str, dict]] = None):
         """Run every scenario, grouped by build_key; returns
         ``(results_in_input_order, run_stats)`` where ``run_stats`` is a
         ``RunnerStats`` of everything the workers did *during this call*.
@@ -300,8 +304,17 @@ class ShardScheduler:
         ``extra["prof_*"]`` payload exactly like the serial path.
         ``on_result`` fires from worker-reader threads as cells complete
         (the ResultStore append path is thread-safe for exactly this).
+
+        ``tracer``/``trace_parent`` stitch the dispatch into the caller's
+        trace: each stolen group gets a ``group:`` span, each cell a
+        ``dispatch:`` span whose context rides the job message so the
+        worker's own spans come back parented under it (matched by cell).
+        ``extras`` maps scenario name -> extra dict forwarded with the
+        job and merged into that cell's result.
         """
         from repro.runner.runner import RunnerStats
+        tracer = tracer or NULL_TRACER
+        extras = extras or {}
         steal = self.steal if steal is None else steal
         ranked = rank_groups(scenarios)
         if steal:
@@ -319,7 +332,8 @@ class ShardScheduler:
             t = threading.Thread(
                 target=self._drive,
                 args=(worker, seed, queue, scenarios, hooks or {}, runs,
-                      warmup, profile, results, run_stats, on_result),
+                      warmup, profile, results, run_stats, on_result,
+                      tracer, trace_parent, extras),
                 name=f"shard-{worker.idx}", daemon=True)
             threads.append(t)
             t.start()
@@ -331,7 +345,9 @@ class ShardScheduler:
                queue: Deque[List[int]], scenarios: Sequence[Scenario],
                hooks: dict, runs: Optional[int], warmup: Optional[int],
                profile: bool, results: List[Optional[RunResult]], run_stats,
-               on_result: Optional[Callable[[RunResult], None]]) -> None:
+               on_result: Optional[Callable[[RunResult], None]],
+               tracer: Tracer = NULL_TRACER, trace_parent=None,
+               extras: Optional[Dict[str, dict]] = None) -> None:
         """One worker's job stream: its seed group first, then whatever
         groups it can steal from the shared deque.  Crashes cost one cell
         each (the worker is respawned for its group's remaining cells)."""
@@ -343,17 +359,34 @@ class ShardScheduler:
                         return
                     group = queue.popleft()   # steal the next ranked group
                 continue
-            for idx in group:
-                self._run_one(worker, idx, scenarios, hooks, runs, warmup,
-                              profile, results, run_stats, on_result)
+            gspan = None
+            if tracer.enabled and group:
+                key = scenarios[group[0]].build_key()
+                gspan = tracer.start(
+                    "group:" + group_label(key), parent=trace_parent,
+                    kind="group", shard=worker.idx, cells=len(group))
+            try:
+                for idx in group:
+                    self._run_one(worker, idx, scenarios, hooks, runs,
+                                  warmup, profile, results, run_stats,
+                                  on_result, tracer, gspan, extras or {})
+            finally:
+                if gspan is not None:
+                    tracer.finish(gspan)
             group = []
 
     def _run_one(self, worker: _Worker, idx: int,
                  scenarios: Sequence[Scenario], hooks: dict,
                  runs: Optional[int], warmup: Optional[int], profile: bool,
                  results: List[Optional[RunResult]], run_stats,
-                 on_result: Optional[Callable[[RunResult], None]]) -> None:
+                 on_result: Optional[Callable[[RunResult], None]],
+                 tracer: Tracer = NULL_TRACER, group_span=None,
+                 extras: Optional[Dict[str, dict]] = None) -> None:
         sc = scenarios[idx]
+        extra = (extras or {}).get(sc.name)
+        ds = tracer.start("dispatch:" + sc.name, kind="dispatch",
+                          parent=group_span, cell=sc.name,
+                          shard=worker.idx) if tracer.enabled else None
         t0 = time.perf_counter()
         try:
             worker.ensure()
@@ -362,10 +395,11 @@ class ShardScheduler:
                 worker.stats_seen = {}   # fresh interpreter: from zero
             hook = hooks.get(sc.name) or hooks.get(sc.bench)
             job = job_message(sc, runs=runs, warmup=warmup,
-                              profile=profile, hook=hook)
-            rr, stats = self._round_trip(worker, job)
+                              profile=profile, hook=hook,
+                              trace=tracer.context(ds), extra=extra)
+            rr, stats, spans = self._round_trip(worker, job)
         except Exception as e:  # noqa: BLE001 — e.g. spawn ENOMEM: the
-            rr, stats = None, None   # shard must keep emitting records
+            rr, stats, spans = None, None, None  # keep emitting records
             reason = f"shard worker {worker.idx} dispatch failed: {e!r}"
         else:
             reason = None if rr is not None else \
@@ -374,6 +408,9 @@ class ShardScheduler:
             worker.kill()
             rr = RunResult.from_error(sc, reason,
                                       wall_s=time.perf_counter() - t0)
+            if extra:
+                rr.extra.update(extra)
+            stamp_provenance(rr)   # worker never saw it: stamp here
             with self._lock:
                 run_stats.scenarios_run += 1
                 run_stats.errors += 1
@@ -383,6 +420,12 @@ class ShardScheduler:
             if delta:
                 with self._lock:
                     run_stats.merge(delta)
+        if ds is not None:
+            tracer.ingest(spans, proc=f"shard{worker.idx}")
+            ds.set(status=rr.status)
+            tracer.finish(ds)
+            rr.extra.setdefault("span_trace", tracer.trace_id)
+            rr.extra["span_dispatch"] = ds.span_id
         rr.extra["shard"] = worker.idx
         rr.extra["isolated"] = True
         results[idx] = rr
@@ -394,12 +437,14 @@ class ShardScheduler:
 
     def _round_trip(self, worker: _Worker, job: dict):
         """Send one job, read its result (which carries the worker's
-        cumulative stats); (None, None) when the worker dies or hangs."""
+        cumulative stats + traced spans); (None, None, None) when the
+        worker dies or hangs."""
         try:
             worker.send(job)
             msg = worker.recv(self.timeout)
         except (OSError, ValueError):
-            return None, None
+            return None, None, None
         if not msg or msg.get("op") != "result":
-            return None, None
-        return RunResult.from_dict(msg["result"]), msg.get("stats")
+            return None, None, None
+        return (RunResult.from_dict(msg["result"]), msg.get("stats"),
+                msg.get("spans"))

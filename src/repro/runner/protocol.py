@@ -14,15 +14,29 @@ Every message is one JSON object per ``\\n``-terminated line.  Kinds
     run       dispatcher -> worker   {"op": "run", "scenario": {...},
                                       "runs": R?, "warmup": W?,
                                       "profile": bool, "hook": {...}?,
-                                      "cell": i?}
+                                      "cell": i?, "trace": {...}?,
+                                      "extra": {...}?}
+                                     ``trace`` is a span context
+                                     ({"trace_id", "parent"}) — when
+                                     present the worker traces the cell
+                                     under that parent span and ships
+                                     its spans back with the result;
+                                     ``extra`` is merged into the
+                                     result's extras by the worker
+                                     (dispatch-side annotations, e.g.
+                                     ``slots_fallback``).
     result    worker -> dispatcher   {"op": "result", "result": <RunResult>,
-                                      "stats": <RunnerStats>, "cell": i?}
+                                      "stats": <RunnerStats>, "cell": i?,
+                                      "spans": [...]?}
                                      ``stats`` is the worker's CUMULATIVE
                                      counter snapshot (the dispatcher
                                      delta-merges, see ``stats_delta``);
                                      ``cell`` echoes the job's id so a
                                      pipelined dispatcher can match
-                                     results to cells.
+                                     results to cells; ``spans`` (only
+                                     when the job carried ``trace``) is
+                                     the worker-side span export for the
+                                     dispatcher to stitch into its trace.
     register  worker -> dispatcher   {"op": "register", "host": str,
                                       "capacity": int}   (socket only:
                                      first message after connecting)
@@ -162,11 +176,15 @@ class Channel:
 
 def job_message(scenario, *, runs: Optional[int], warmup: Optional[int],
                 profile: bool, hook=None,
-                cell: Optional[int] = None) -> dict:
+                cell: Optional[int] = None,
+                trace: Optional[dict] = None,
+                extra: Optional[dict] = None) -> dict:
     """One ``run`` job.  Regression hooks cross the process/host boundary
     as their plain parameters (``slowdown_s``/``leak_bytes``); custom
     ``RegressionHook`` subclasses with dispatcher-process behaviour
-    cannot."""
+    cannot.  ``trace`` is the dispatcher's span context (see module
+    docstring); ``extra`` rides to the worker and is merged into the
+    result's extras before it is measured/recorded."""
     msg: Dict = {"op": "run", "scenario": scenario.to_dict(),
                  "runs": runs, "warmup": warmup, "profile": profile}
     if hook is not None:
@@ -174,6 +192,10 @@ def job_message(scenario, *, runs: Optional[int], warmup: Optional[int],
                        "leak_bytes": getattr(hook, "leak_bytes", 0)}
     if cell is not None:
         msg["cell"] = cell
+    if trace is not None:
+        msg["trace"] = trace
+    if extra:
+        msg["extra"] = extra
     return msg
 
 

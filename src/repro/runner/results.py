@@ -41,6 +41,49 @@ must tolerate their absence):
                                   snapshot (model builds / compiles that
                                   happened out-of-process)
 
+Provenance stamps (``repro.telemetry.provenance``, still schema v1): the
+runner stamps EVERY record — ok and error, every transport — with the
+environment that produced it, so a result history can be grouped into
+comparable series (``repro.telemetry.history`` keys baselines and drift
+detection on them).  Worker-side stamps win (correct host); dispatchers
+only backstop records workers never produced (dead-worker errors):
+
+    extra["prov_commit"]   str    git commit sha of the benchmarked tree
+                                  (``$REPRO_COMMIT`` overrides when the
+                                  deployed tree is not a git checkout)
+    extra["prov_dirty"]    bool   the working tree had uncommitted changes
+    extra["prov_backend"]  str    ``jax.default_backend()`` ("cpu"/"gpu"/
+                                  "tpu") of the measuring process
+    extra["prov_host"]     str    hostname of the measuring process
+    extra["prov_jax"]      str    jax version
+    extra["prov_python"]   str    python version
+
+Span-tracing stamps (``repro.telemetry.spans``; present only when the
+run was traced — a ``Tracer`` was passed to the runner or
+``benchmarks.run --trace-out`` was used):
+
+    extra["span_trace"]    str    trace id of the ``run_matrix`` call this
+                                  record was measured in (one id per call,
+                                  shared across coordinator and workers)
+    extra["span_cell"]     str    span id of the cell span that timed this
+                                  record (worker-side under pool/cluster
+                                  dispatch)
+    extra["span_dispatch"] str    span id of the dispatcher-side dispatch
+                                  slot (pool/cluster transports only) —
+                                  the worker's cell spans nest under it in
+                                  the exported Chrome trace
+
+Matrix-expansion annotations:
+
+    extra["slots_fallback"] str   the cell's ``slots="auto"`` resolution
+                                  fell back to the default width; the
+                                  value names why ("missing" |
+                                  "unreadable" | "stale-schema" |
+                                  "foreign-arch" | "degenerate-curve",
+                                  see ``runner/loadgen.auto_slots_info``).
+                                  Absent when a real measured curve was
+                                  used.
+
 Serving cells (``task="serve"``, the continuous-batching engine in
 ``repro.launch.serve``) additionally carry the latency-distribution
 metrics production users compare (all latencies in **microseconds**,
@@ -302,9 +345,13 @@ class ResultStore:
             with open(self.latest_path) as f:
                 self.latest = json.load(f)
 
-    def append(self, record) -> dict:
+    def append(self, record, *, advance_latest: bool = True) -> dict:
         """Append one record (RunResult or plain dict with a "name" key) to
-        the log and move the latest pointer; returns the stored dict."""
+        the log and move the latest pointer; returns the stored dict.
+
+        ``advance_latest=False`` appends to the history log only — for
+        time-series points (``MetricStore.log_result``) that must not
+        shadow the latest-pointer view other readers key baselines on."""
         rec = record.to_dict() if hasattr(record, "to_dict") else dict(record)
         rec.setdefault("schema", SCHEMA_VERSION)
         rec.setdefault("ts", time.time())
@@ -317,7 +364,8 @@ class ResultStore:
             os.write(fd, line)
         finally:
             os.close(fd)
-        self._advance_latest(rec)
+        if advance_latest:
+            self._advance_latest(rec)
         return rec
 
     def _advance_latest(self, rec: dict) -> None:

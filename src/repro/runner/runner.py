@@ -42,6 +42,8 @@ from repro.runner.traces import cache_len_bound, spec_for_scenario
 from repro.runner.traces import generate as generate_trace
 from repro.runner.results import ResultStore, RunResult
 from repro.runner.scenario import Scenario, ScenarioMatrix, select_scenarios
+from repro.telemetry.provenance import stamp as stamp_provenance
+from repro.telemetry.spans import NULL_TRACER, Tracer, group_label
 
 
 @dataclasses.dataclass
@@ -81,7 +83,8 @@ class BenchmarkRunner:
                  runs: int = 5, warmup: int = 1, compile_warmup: int = 3,
                  reuse: bool = True, isolate: bool = False, jobs: int = 0,
                  measure_fence: bool = True, profile: bool = False,
-                 cluster: str = "", steal: bool = True):
+                 cluster: str = "", steal: bool = True,
+                 tracer: Optional[Tracer] = None):
         self.store = store
         self.runs = runs
         self.warmup = warmup
@@ -110,6 +113,11 @@ class BenchmarkRunner:
         # timelines + op-class attribution under extra["prof_*"]; per-call
         # override via run(..., profile=...)
         self.profile = profile
+        # span tracing (src/repro/telemetry/): an enabled Tracer records
+        # matrix -> group -> cell -> phase spans and stitches worker-side
+        # spans under their dispatch span via the job protocol; the
+        # default NULL_TRACER makes every span site a cheap no-op
+        self.tracer = tracer or NULL_TRACER
         # session-level scenario selection (the CLI --filter/--exclude
         # regexes), applied on top of each matrix's own selection
         self.default_filter: Tuple[str, ...] = ()
@@ -196,7 +204,8 @@ class BenchmarkRunner:
 
     def run(self, scenario: Scenario, *, hook: Optional[RegressionHook] = None,
             runs: Optional[int] = None, warmup: Optional[int] = None,
-            record: bool = True, profile: Optional[bool] = None) -> RunResult:
+            record: bool = True, profile: Optional[bool] = None,
+            extra: Optional[Dict[str, Any]] = None) -> RunResult:
         """Execute one scenario and return its RunResult (never raises for
         benchmark failures — they come back as status="error" records).
 
@@ -209,63 +218,97 @@ class BenchmarkRunner:
         it over HLO op classes (``repro.profiler``); the profile lands
         under ``extra["prof_*"]``.  Eager cells can't profile (no compiled
         module, synchronous dispatch) and record ``prof_skipped`` instead.
+
+        ``extra`` is merged into the result's extras (ok or error) —
+        the dispatch layers use it to attach matrix-expansion context
+        (e.g. ``slots_fallback``) to the record before it is stored.
         """
         prof = self.profile if profile is None else profile
         if self.isolate:
             return self._run_isolated(scenario, hook=hook, runs=runs,
                                       warmup=warmup, record=record,
-                                      profile=prof)
+                                      profile=prof, extra=extra)
         if scenario.task in ("serve", "loadgen"):
             return self._run_serve(scenario, hook=hook, record=record,
-                                   profile=prof)
+                                   profile=prof, extra=extra)
         if scenario.task == "kernel":
             return self._run_kernel(scenario, hook=hook, runs=runs,
                                     warmup=warmup, record=record,
-                                    profile=prof)
+                                    profile=prof, extra=extra)
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
+        tr = self.tracer
         phase_log: Optional[List[Tuple[float, float]]] = None
-        try:
-            entry, cache = self._resolve(scenario)
-            if scenario.mode == "eager":
-                m = measure_eager(scenario.name, entry.step, entry.args,
-                                  runs=max(2, (runs or self.runs) // 2),
-                                  hook=hook)
-            else:
-                if prof:
-                    phase_log = []
-                final_args: List[Tuple] = []
-                wu = self.warmup if warmup is None else warmup
-                if not cache.get("executable_reused"):
-                    wu += self.compile_warmup
-                m = measure(scenario.name, entry.step, entry.args, entry.donate,
-                            runs=runs or self.runs, warmup=wu,
-                            hook=hook, jitted=entry.jitted,
-                            final_args=final_args, phase_log=phase_log)
-                if self.reuse and final_args:
-                    # donated buffers were consumed: keep the threaded args
-                    # so the cached executable stays callable next time
-                    entry.args = final_args[0]
-            rr = RunResult.from_measurement(
-                scenario, m, wall_s=time.perf_counter() - t0, cache=cache)
-            if cache.get("executable_reused"):
-                # nothing compiled on a cache hit; measure()'s first call
-                # timed an ordinary step, which is not a compile time
-                rr.compile_us = 0.0
-            if prof:
+        with tr.span("cell:" + scenario.name, kind="cell",
+                     cell=scenario.name) as cs:
+            try:
+                with tr.span("build", kind="phase"):
+                    entry, cache = self._resolve(scenario)
                 if scenario.mode == "eager":
-                    rr.extra["prof_skipped"] = "eager"
+                    with tr.span("measure", kind="phase"):
+                        m = measure_eager(scenario.name, entry.step,
+                                          entry.args,
+                                          runs=max(2, (runs or self.runs) // 2),
+                                          hook=hook)
                 else:
-                    rr.extra.update(self._profile_extra(
-                        scenario, phase_log,
-                        lambda: entry.jitted.lower(*entry.args)))
-        except Exception as e:  # noqa: BLE001 — fault containment per cell
-            self.stats.errors += 1
-            # a failed measure may have consumed donated buffers mid-loop:
-            # evict the cached executable so the next run rebuilds cleanly
-            self._execs.pop(scenario, None)
-            rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
-                                      wall_s=time.perf_counter() - t0)
+                    if prof:
+                        phase_log = []
+                    events: Optional[list] = [] if tr.enabled else None
+                    final_args: List[Tuple] = []
+                    wu = self.warmup if warmup is None else warmup
+                    if not cache.get("executable_reused"):
+                        wu += self.compile_warmup
+                    m = measure(scenario.name, entry.step, entry.args,
+                                entry.donate,
+                                runs=runs or self.runs, warmup=wu,
+                                hook=hook, jitted=entry.jitted,
+                                final_args=final_args, phase_log=phase_log,
+                                events=events)
+                    if self.reuse and final_args:
+                        # donated buffers were consumed: keep the threaded
+                        # args so the cached executable stays callable next
+                        # time
+                        entry.args = final_args[0]
+                    if events:
+                        for ph, tw0, tw1 in events:
+                            tr.add(ph, ts=tw0, dur_s=tw1 - tw0, parent=cs)
+                rr = RunResult.from_measurement(
+                    scenario, m, wall_s=time.perf_counter() - t0, cache=cache)
+                if cache.get("executable_reused"):
+                    # nothing compiled on a cache hit; measure()'s first call
+                    # timed an ordinary step, which is not a compile time
+                    rr.compile_us = 0.0
+                if prof:
+                    if scenario.mode == "eager":
+                        rr.extra["prof_skipped"] = "eager"
+                    else:
+                        with tr.span("attribute", kind="phase"):
+                            rr.extra.update(self._profile_extra(
+                                scenario, phase_log,
+                                lambda: entry.jitted.lower(*entry.args)))
+            except Exception as e:  # noqa: BLE001 — fault containment per cell
+                self.stats.errors += 1
+                # a failed measure may have consumed donated buffers
+                # mid-loop: evict the cached executable so the next run
+                # rebuilds cleanly
+                self._execs.pop(scenario, None)
+                rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
+                                          wall_s=time.perf_counter() - t0)
+                cs.set(error=rr.error)
+            cs.set(status=rr.status)
+        return self._finalize(rr, cs, extra, record)
+
+    def _finalize(self, rr: RunResult, cell_span: Any,
+                  extra: Optional[Dict[str, Any]], record: bool) -> RunResult:
+        """Shared result epilogue: merge dispatch-provided extras, stamp
+        span ids + provenance, record."""
+        if extra:
+            rr.extra.update(extra)
+        tr = self.tracer
+        if tr.enabled and getattr(cell_span, "span_id", ""):
+            rr.extra["span_trace"] = tr.trace_id
+            rr.extra["span_cell"] = cell_span.span_id
+        stamp_provenance(rr)
         if record and self.store is not None:
             self.store.append(rr)
         return rr
@@ -276,7 +319,8 @@ class BenchmarkRunner:
                     hook: Optional[RegressionHook] = None,
                     runs: Optional[int] = None,
                     warmup: Optional[int] = None,
-                    record: bool = True, profile: bool = False) -> RunResult:
+                    record: bool = True, profile: bool = False,
+                    extra: Optional[Dict[str, Any]] = None) -> RunResult:
         """One tuning candidate (``task="kernel"``): decode the candidate
         id from the ``arch`` axis (``repro.tuning.space``), jit its
         ops-layer call, and measure it under the standard ``measure()``
@@ -291,47 +335,60 @@ class BenchmarkRunner:
         from repro.tuning import space as tuning_space
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
+        tr = self.tracer
         phase_log: Optional[List[Tuple[float, float]]] = None
-        try:
-            case, params = tuning_space.parse_candidate(
-                scenario.arch, dtype=scenario.dtype)
-            if self.reuse and scenario in self._execs:
-                self.stats.executable_cache_hits += 1
-                entry = self._execs[scenario]
-                cache = {"model_reused": True, "executable_reused": True}
-            else:
-                step, args = tuning_space.bench_callable(case, params)
-                entry = _ExecEntry(jitted=prepare(step), step=step,
-                                   args=args, donate=())
-                self.stats.executable_builds += 1
-                if self.reuse:
-                    self._execs[scenario] = entry
-                cache = {"model_reused": False, "executable_reused": False}
-            if profile:
-                phase_log = []
-            wu = self.warmup if warmup is None else warmup
-            if not cache["executable_reused"]:
-                wu += self.compile_warmup
-            m = measure(scenario.name, entry.step, entry.args, entry.donate,
-                        runs=runs or self.runs, warmup=wu, hook=hook,
-                        jitted=entry.jitted, phase_log=phase_log)
-            rr = RunResult.from_measurement(
-                scenario, m, wall_s=time.perf_counter() - t0, cache=cache,
-                extra=tuning_space.result_extra(case, params))
-            if cache["executable_reused"]:
-                rr.compile_us = 0.0
-            if profile:
-                rr.extra.update(self._profile_extra(
-                    scenario, phase_log,
-                    lambda: entry.jitted.lower(*entry.args)))
-        except Exception as e:  # noqa: BLE001 — fault containment per cell
-            self.stats.errors += 1
-            self._execs.pop(scenario, None)
-            rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
-                                      wall_s=time.perf_counter() - t0)
-        if record and self.store is not None:
-            self.store.append(rr)
-        return rr
+        with tr.span("cell:" + scenario.name, kind="cell",
+                     cell=scenario.name) as cs:
+            try:
+                with tr.span("build", kind="phase"):
+                    case, params = tuning_space.parse_candidate(
+                        scenario.arch, dtype=scenario.dtype)
+                    if self.reuse and scenario in self._execs:
+                        self.stats.executable_cache_hits += 1
+                        entry = self._execs[scenario]
+                        cache = {"model_reused": True,
+                                 "executable_reused": True}
+                    else:
+                        step, args = tuning_space.bench_callable(case, params)
+                        entry = _ExecEntry(jitted=prepare(step), step=step,
+                                           args=args, donate=())
+                        self.stats.executable_builds += 1
+                        if self.reuse:
+                            self._execs[scenario] = entry
+                        cache = {"model_reused": False,
+                                 "executable_reused": False}
+                if profile:
+                    phase_log = []
+                events: Optional[list] = [] if tr.enabled else None
+                wu = self.warmup if warmup is None else warmup
+                if not cache["executable_reused"]:
+                    wu += self.compile_warmup
+                m = measure(scenario.name, entry.step, entry.args,
+                            entry.donate,
+                            runs=runs or self.runs, warmup=wu, hook=hook,
+                            jitted=entry.jitted, phase_log=phase_log,
+                            events=events)
+                if events:
+                    for ph, tw0, tw1 in events:
+                        tr.add(ph, ts=tw0, dur_s=tw1 - tw0, parent=cs)
+                rr = RunResult.from_measurement(
+                    scenario, m, wall_s=time.perf_counter() - t0, cache=cache,
+                    extra=tuning_space.result_extra(case, params))
+                if cache["executable_reused"]:
+                    rr.compile_us = 0.0
+                if profile:
+                    with tr.span("attribute", kind="phase"):
+                        rr.extra.update(self._profile_extra(
+                            scenario, phase_log,
+                            lambda: entry.jitted.lower(*entry.args)))
+            except Exception as e:  # noqa: BLE001 — fault containment per cell
+                self.stats.errors += 1
+                self._execs.pop(scenario, None)
+                rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
+                                          wall_s=time.perf_counter() - t0)
+                cs.set(error=rr.error)
+            cs.set(status=rr.status)
+        return self._finalize(rr, cs, extra, record)
 
     # ---- measured profiling ---------------------------------------------
 
@@ -386,7 +443,8 @@ class BenchmarkRunner:
 
     def _run_serve(self, scenario: Scenario, *,
                    hook: Optional[RegressionHook] = None,
-                   record: bool = True, profile: bool = False) -> RunResult:
+                   record: bool = True, profile: bool = False,
+                   extra: Optional[Dict[str, Any]] = None) -> RunResult:
         """One serving or loadgen cell: regenerate the scenario's trace,
         replay it through the (cached) engine, and fold the latency
         distribution into a RunResult — ``median_us``/``mean_us``/
@@ -409,94 +467,147 @@ class BenchmarkRunner:
         from repro.runner.traces import capture_spec
         t0 = time.perf_counter()
         self.stats.scenarios_run += 1
+        tr = self.tracer
         key = None
-        try:
-            spec = spec_for_scenario(scenario)
-            hits0 = self.stats.model_cache_hits
-            built = self.built_for(scenario.arch, dtype=scenario.dtype,
-                                   mode=scenario.mode)
-            model_reused = self.stats.model_cache_hits > hits0
-            reqs = generate_trace(spec, vocab=built.cfg.vocab)
-            if scenario.task == "loadgen":
-                reqs = scale_arrivals(shard_requests(reqs, scenario.split),
-                                      scenario.load)
-                if not reqs:
-                    raise ValueError(f"split {scenario.split!r} leaves an "
-                                     f"empty shard of {spec.requests} requests")
-            # sized for the whole replay: per-slot positions mean a row
-            # never needs more than its own prompt + budget (+ vlm prefix)
-            prefix = built.cfg.n_prefix if built.cfg.family == "vlm" else 0
-            max_len = cache_len_bound(reqs, prefix=prefix)
-            key = (scenario.build_key(), scenario.mode, max_len,
-                   scenario.admission)
-            engine, engine_reused = self._serve_engine_for(scenario, built,
-                                                           max_len)
-            cache = {"model_reused": model_reused or engine_reused,
-                     "executable_reused": engine_reused}
-            compile_us = 0.0
-            if not engine_reused:
-                # untimed warm replay on a fresh engine: pays the prefill/
-                # decode jit (recorded as compile_us, like a step cell's
-                # first measure call) so the measured replay's latency
-                # samples — and its TTFTs — are steady-state and stay
-                # comparable with cache-hit re-measures
-                tc = time.perf_counter()
-                engine.run(reqs)
-                compile_us = (time.perf_counter() - tc) * 1e6
-            phase_log: Optional[List[Tuple[float, float]]] = \
-                [] if profile else None
-            out = engine.run(reqs, hook=hook, phase_log=phase_log)
-            if out["admit_new_shapes"]:
-                # this replay's queue dynamics reached prefill bucket shapes
-                # no earlier replay on this engine had compiled (batched
-                # admission shapes are load-dependent), so it paid those
-                # jits inside the timed window: fold its wall into
-                # compile_us and re-measure steady-state — the rerun is
-                # shape-complete because the replay is deterministic
-                compile_us += out["wall_s"] * 1e6
-                phase_log = [] if profile else None
-                out = engine.run(reqs, hook=hook, phase_log=phase_log)
-            extra = summarize_metrics(out)
-            plens = sorted(len(r.prompt) for r in reqs)
-            extra.update(trace=scenario.trace, slots=scenario.slots,
-                         tokens=out["tokens_by_rid"],
-                         prompt_len_p50=percentile(plens, 50),
-                         prompt_len_p95=percentile(plens, 95))
-            # capture provenance: the replayed trace as a save_spec-schema
-            # payload, so any recorded serve/loadgen run is replayable via
-            # trace="file:PATH" (load sharding/scaling already applied)
-            extra["capture"] = dataclasses.asdict(capture_spec(
-                reqs, seed=spec.seed, source=f"capture:{scenario.name}"))
-            if scenario.task == "loadgen":
-                extra.update(offered_load=scenario.load,
-                             split=scenario.split)
-            if profile:
-                extra.update(self._profile_extra(
-                    ("serve-cost",) + key, phase_log,
-                    engine.lowered_decode, kind="decode_step",
-                    wall_s=out["wall_s"]))
-            lats = out["tok_lat_s"] or out["ttft_s"]
-            rr = RunResult(
-                name=scenario.name, bench=scenario.bench, arch=scenario.arch,
-                task=scenario.task, batch=scenario.batch, seq=scenario.seq,
-                dtype=scenario.dtype, mode=scenario.mode, status="ok",
-                median_us=percentile(lats, 50) * 1e6,
-                mean_us=sum(lats) / len(lats) * 1e6,
-                p10_us=percentile(lats, 10) * 1e6,
-                p90_us=percentile(lats, 90) * 1e6,
-                compile_us=compile_us, runs=out["requests"],
-                wall_s=time.perf_counter() - t0, cache=cache,
-                ts=time.time(), extra=extra)
-        except Exception as e:  # noqa: BLE001 — fault containment per cell
-            self.stats.errors += 1
-            # the engine's donated KV cache may be half-consumed: evict it
-            if key is not None:
-                self._serve_engines.pop(key, None)
-            rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
-                                      wall_s=time.perf_counter() - t0)
-        if record and self.store is not None:
-            self.store.append(rr)
-        return rr
+        with tr.span("cell:" + scenario.name, kind="cell",
+                     cell=scenario.name) as cs:
+            try:
+                with tr.span("build", kind="phase"):
+                    spec = spec_for_scenario(scenario)
+                    hits0 = self.stats.model_cache_hits
+                    built = self.built_for(scenario.arch,
+                                           dtype=scenario.dtype,
+                                           mode=scenario.mode)
+                    model_reused = self.stats.model_cache_hits > hits0
+                    reqs = generate_trace(spec, vocab=built.cfg.vocab)
+                    if scenario.task == "loadgen":
+                        reqs = scale_arrivals(
+                            shard_requests(reqs, scenario.split),
+                            scenario.load)
+                        if not reqs:
+                            raise ValueError(
+                                f"split {scenario.split!r} leaves an empty "
+                                f"shard of {spec.requests} requests")
+                    # sized for the whole replay: per-slot positions mean a
+                    # row never needs more than its own prompt + budget
+                    # (+ vlm prefix)
+                    prefix = (built.cfg.n_prefix
+                              if built.cfg.family == "vlm" else 0)
+                    max_len = cache_len_bound(reqs, prefix=prefix)
+                    key = (scenario.build_key(), scenario.mode, max_len,
+                           scenario.admission)
+                    engine, engine_reused = self._serve_engine_for(
+                        scenario, built, max_len)
+                cache = {"model_reused": model_reused or engine_reused,
+                         "executable_reused": engine_reused}
+                compile_us = 0.0
+                if not engine_reused:
+                    # untimed warm replay on a fresh engine: pays the
+                    # prefill/decode jit (recorded as compile_us, like a
+                    # step cell's first measure call) so the measured
+                    # replay's latency samples — and its TTFTs — are
+                    # steady-state and stay comparable with cache-hit
+                    # re-measures
+                    with tr.span("compile", kind="phase"):
+                        tc = time.perf_counter()
+                        engine.run(reqs)
+                        compile_us = (time.perf_counter() - tc) * 1e6
+                phase_log: Optional[List[Tuple[float, float]]] = \
+                    [] if profile else None
+                span_log: Optional[list] = [] if tr.enabled else None
+                with tr.span("measure", kind="phase") as ms:
+                    out = engine.run(reqs, hook=hook, phase_log=phase_log,
+                                     span_log=span_log)
+                self._add_serve_spans(tr, ms, span_log)
+                if out["admit_new_shapes"]:
+                    # this replay's queue dynamics reached prefill bucket
+                    # shapes no earlier replay on this engine had compiled
+                    # (batched admission shapes are load-dependent), so it
+                    # paid those jits inside the timed window: fold its
+                    # wall into compile_us and re-measure steady-state —
+                    # the rerun is shape-complete because the replay is
+                    # deterministic
+                    compile_us += out["wall_s"] * 1e6
+                    phase_log = [] if profile else None
+                    span_log = [] if tr.enabled else None
+                    with tr.span("measure", kind="phase",
+                                 remeasure=True) as ms:
+                        out = engine.run(reqs, hook=hook,
+                                         phase_log=phase_log,
+                                         span_log=span_log)
+                    self._add_serve_spans(tr, ms, span_log)
+                sx = summarize_metrics(out)
+                plens = sorted(len(r.prompt) for r in reqs)
+                sx.update(trace=scenario.trace, slots=scenario.slots,
+                          tokens=out["tokens_by_rid"],
+                          prompt_len_p50=percentile(plens, 50),
+                          prompt_len_p95=percentile(plens, 95))
+                # capture provenance: the replayed trace as a
+                # save_spec-schema payload, so any recorded serve/loadgen
+                # run is replayable via trace="file:PATH" (load sharding/
+                # scaling already applied)
+                sx["capture"] = dataclasses.asdict(capture_spec(
+                    reqs, seed=spec.seed, source=f"capture:{scenario.name}"))
+                if scenario.task == "loadgen":
+                    sx.update(offered_load=scenario.load,
+                              split=scenario.split)
+                if profile:
+                    with tr.span("attribute", kind="phase"):
+                        sx.update(self._profile_extra(
+                            ("serve-cost",) + key, phase_log,
+                            engine.lowered_decode, kind="decode_step",
+                            wall_s=out["wall_s"]))
+                lats = out["tok_lat_s"] or out["ttft_s"]
+                rr = RunResult(
+                    name=scenario.name, bench=scenario.bench,
+                    arch=scenario.arch,
+                    task=scenario.task, batch=scenario.batch,
+                    seq=scenario.seq,
+                    dtype=scenario.dtype, mode=scenario.mode, status="ok",
+                    median_us=percentile(lats, 50) * 1e6,
+                    mean_us=sum(lats) / len(lats) * 1e6,
+                    p10_us=percentile(lats, 10) * 1e6,
+                    p90_us=percentile(lats, 90) * 1e6,
+                    compile_us=compile_us, runs=out["requests"],
+                    wall_s=time.perf_counter() - t0, cache=cache,
+                    ts=time.time(), extra=sx)
+            except Exception as e:  # noqa: BLE001 — fault containment per cell
+                self.stats.errors += 1
+                # the engine's donated KV cache may be half-consumed:
+                # evict it
+                if key is not None:
+                    self._serve_engines.pop(key, None)
+                rr = RunResult.from_error(scenario, f"{type(e).__name__}: {e}",
+                                          wall_s=time.perf_counter() - t0)
+                cs.set(error=rr.error)
+            cs.set(status=rr.status)
+        return self._finalize(rr, cs, extra, record)
+
+    @staticmethod
+    def _add_serve_spans(tr: Tracer, parent: Any, span_log: Optional[list],
+                         cap: int = 64) -> None:
+        """Attach the engine's admit-wave / decode-step wall intervals as
+        children of the serve cell's measure span.  Decode steps beyond
+        *cap* are elided (count + total time noted on the parent) so a
+        long replay doesn't bloat the trace."""
+        if not span_log:
+            return
+        shown = dropped = 0
+        dropped_s = 0.0
+        for ev in span_log:
+            name, tw0, tw1 = ev[0], ev[1], ev[2]
+            attrs = ev[3] if len(ev) > 3 and isinstance(ev[3], dict) else {}
+            if name == "decode_step":
+                if shown >= cap:
+                    dropped += 1
+                    dropped_s += tw1 - tw0
+                    continue
+                shown += 1
+            tr.add(name, ts=tw0, dur_s=tw1 - tw0, parent=parent,
+                   kind="engine", **attrs)
+        if dropped:
+            parent.set(decode_steps_dropped=dropped,
+                       decode_steps_dropped_s=round(dropped_s, 6))
 
     def select(self, matrix: ScenarioMatrix) -> List[Scenario]:
         """Matrix expansion with the runner's session-level filter/exclude
@@ -528,32 +639,85 @@ class BenchmarkRunner:
         setting) profiles every cell — under sharded/cluster dispatch the
         flag rides in each worker job, so profiled sweeps dispatch exactly
         like unprofiled ones.
+
+        An enabled ``tracer`` records ONE trace per call regardless of
+        transport: a matrix root span, a group span per build key, and a
+        cell span per scenario with its phase children — worker-side
+        spans ride back in the job protocol and stitch under their
+        dispatch span.
         """
         scenarios = self.select(matrix)
         jobs = self.jobs if jobs is None else jobs
         cluster = self.cluster if cluster is None else cluster
-        if cluster and scenarios:
-            return self._run_clustered(scenarios, hooks=hooks, runs=runs,
-                                       warmup=warmup, cluster=cluster,
-                                       profile=profile)
-        if jobs and jobs > 1 and scenarios:
-            # even a single selected cell goes through the pool: the caller
-            # opted into worker fault containment and shard metadata
-            return self._run_sharded(scenarios, hooks=hooks, runs=runs,
-                                     warmup=warmup, jobs=jobs,
-                                     profile=profile)
-        out = []
-        for sc in scenarios:
-            hook = (hooks or {}).get(sc.name) or (hooks or {}).get(sc.bench)
-            out.append(self.run(sc, hook=hook, runs=runs, warmup=warmup,
-                                profile=profile))
-        return out
+        extras = self._matrix_extras(matrix, scenarios)
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin_trace()
+        transport = ("cluster:" + cluster if cluster and scenarios else
+                     f"jobs={jobs}" if jobs and jobs > 1 and scenarios else
+                     "serial")
+        with tr.span("matrix", kind="matrix", cells=len(scenarios),
+                     transport=transport) as root:
+            if cluster and scenarios:
+                return self._run_clustered(scenarios, hooks=hooks, runs=runs,
+                                           warmup=warmup, cluster=cluster,
+                                           profile=profile,
+                                           trace_parent=root, extras=extras)
+            if jobs and jobs > 1 and scenarios:
+                # even a single selected cell goes through the pool: the
+                # caller opted into worker fault containment and shard
+                # metadata
+                return self._run_sharded(scenarios, hooks=hooks, runs=runs,
+                                         warmup=warmup, jobs=jobs,
+                                         profile=profile,
+                                         trace_parent=root, extras=extras)
+            out = []
+            for sc in scenarios:
+                hook = (hooks or {}).get(sc.name) or (hooks or {}).get(sc.bench)
+                out.append(self.run(sc, hook=hook, runs=runs, warmup=warmup,
+                                    profile=profile,
+                                    extra=extras.get(sc.name)))
+            if tr.enabled:
+                self._stitch_serial_groups(tr, scenarios, out, root)
+            return out
+
+    @staticmethod
+    def _matrix_extras(matrix: ScenarioMatrix,
+                       scenarios: List[Scenario]) -> Dict[str, Dict[str, Any]]:
+        """Per-cell extras derived from matrix expansion (currently the
+        ``slots_fallback`` staleness marker from ``slots="auto"``
+        resolution) — attached to each result before it is recorded,
+        on every transport."""
+        fb = getattr(matrix, "slots_fallback", None)
+        fb = fb() if callable(fb) else {}
+        if not fb:
+            return {}
+        return {sc.name: {"slots_fallback": fb[sc.name]}
+                for sc in scenarios if sc.name in fb}
+
+    @staticmethod
+    def _stitch_serial_groups(tr: Tracer, scenarios: List[Scenario],
+                              results: List[RunResult], root: Any) -> None:
+        """Serial cells interleave across build keys in matrix order, so
+        their group spans are synthesized after the loop from the
+        recorded cell spans (pool/cluster dispatchers open group spans
+        live instead)."""
+        by_key: Dict[Tuple, List[str]] = {}
+        for sc, rr in zip(scenarios, results):
+            sid = rr.extra.get("span_cell")
+            if sid and tr.find(sid) is not None:
+                by_key.setdefault(sc.build_key(), []).append(sid)
+        for bkey, ids in by_key.items():
+            tr.group("group:" + group_label(bkey), ids, parent=root)
 
     def _run_sharded(self, scenarios: List[Scenario], *,
                      hooks: Optional[Dict[str, RegressionHook]],
                      runs: Optional[int], warmup: Optional[int],
                      jobs: int,
-                     profile: Optional[bool] = None) -> List[RunResult]:
+                     profile: Optional[bool] = None,
+                     trace_parent: Any = None,
+                     extras: Optional[Dict[str, Dict[str, Any]]] = None
+                     ) -> List[RunResult]:
         """Dispatch a scenario batch to the persistent shard pool; the pool
         (and its workers' warm caches) lives until ``close()``."""
         if self._pool is not None and self._pool.jobs != jobs:
@@ -571,7 +735,10 @@ class BenchmarkRunner:
                                             runs=runs, warmup=warmup,
                                             profile=prof,
                                             on_result=record,
-                                            steal=self.steal)
+                                            steal=self.steal,
+                                            tracer=self.tracer,
+                                            trace_parent=trace_parent,
+                                            extras=extras)
         self.stats.merge(run_stats)
         return results
 
@@ -579,7 +746,10 @@ class BenchmarkRunner:
                        hooks: Optional[Dict[str, RegressionHook]],
                        runs: Optional[int], warmup: Optional[int],
                        cluster: str,
-                       profile: Optional[bool] = None) -> List[RunResult]:
+                       profile: Optional[bool] = None,
+                       trace_parent: Any = None,
+                       extras: Optional[Dict[str, Dict[str, Any]]] = None
+                       ) -> List[RunResult]:
         """Dispatch a scenario batch to the cluster coordinator; the
         coordinator — its worker connections, and for ``local:N`` the
         spawned worker subprocesses with their warm caches — lives until
@@ -598,7 +768,10 @@ class BenchmarkRunner:
         results, run_stats = self._cluster.run(scenarios, hooks=hooks,
                                                runs=runs, warmup=warmup,
                                                profile=prof,
-                                               on_result=record)
+                                               on_result=record,
+                                               tracer=self.tracer,
+                                               trace_parent=trace_parent,
+                                               extras=extras)
         self.stats.merge(run_stats)
         return results
 
@@ -609,7 +782,8 @@ class BenchmarkRunner:
                       runs: Optional[int] = None,
                       warmup: Optional[int] = None,
                       record: bool = True, timeout: int = 1200,
-                      profile: bool = False) -> RunResult:
+                      profile: bool = False,
+                      extra: Optional[Dict[str, Any]] = None) -> RunResult:
         """One scenario in its own interpreter: a crash (OOM, segfault in a
         kernel, ...) becomes an error record instead of killing the sweep.
 
@@ -660,6 +834,11 @@ class BenchmarkRunner:
         finally:
             if os.path.exists(out):
                 os.remove(out)
+        if extra:
+            rr.extra.update(extra)
+        # the worker stamped its own provenance (correct host/backend);
+        # setdefault only fills locally-created error records
+        stamp_provenance(rr)
         if record and self.store is not None:
             self.store.append(rr)
         return rr
@@ -696,11 +875,11 @@ class BenchmarkRunner:
         if self.store is not None:
             status = "skipped" if "skipped" in cell else \
                      ("error" if "error" in cell else "ok")
-            self.store.append(RunResult(
+            self.store.append(stamp_provenance(RunResult(
                 name=name, bench=f"{arch}/{shape}", arch=arch, task="train",
                 batch=0, seq=0, dtype="fp32", mode="jit_donated",
                 status=status, error=cell.get("error"),
-                ts=time.time(), extra={"cell": cell, "derived": True}))
+                ts=time.time(), extra={"cell": cell, "derived": True})))
         return cell
 
     def dryrun_cells(self, cells: Sequence[Tuple[str, str]], *,

@@ -299,15 +299,24 @@ class ScenarioMatrix:
         if cached is not None and cached[0] == key:
             return cached[1]
         skip = set(self.skip)
-        slot_cache: Dict[str, int] = {}
+        # per-arch (slots, fallback_reason) for slots="auto"; cells whose
+        # resolution fell back carry the reason to the dispatch layer as
+        # extra["slots_fallback"] (see BenchmarkRunner._matrix_extras)
+        slot_cache: Dict[str, Tuple[int, str]] = {}
+        fallbacks: Dict[str, str] = {}
 
         def resolve_slots(k, arch):
             if k != "auto":
                 return k
             if arch not in slot_cache:
-                from repro.runner.loadgen import auto_slots
-                slot_cache[arch] = auto_slots(arch)
-            return slot_cache[arch]
+                from repro.runner.loadgen import auto_slots_info
+                slot_cache[arch] = auto_slots_info(arch)
+            return slot_cache[arch][0]
+
+        def mark_auto(s: Scenario, k, arch) -> Scenario:
+            if k == "auto" and slot_cache.get(arch, (0, ""))[1]:
+                fallbacks[s.name] = slot_cache[arch][1]
+            return s
 
         out: List[Scenario] = []
         for arch, task, batch, seq, dtype, mode in itertools.product(
@@ -316,19 +325,22 @@ class ScenarioMatrix:
             if task == "serve":
                 if mode not in SERVE_MODES:
                     continue      # eager/reduced-config modes are train-only
-                cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
-                                  dtype=dtype, mode=mode,
-                                  slots=resolve_slots(k, arch), trace=t,
-                                  admission=adm)
+                cells = [mark_auto(
+                             Scenario(arch=arch, task=task, batch=batch,
+                                      seq=seq, dtype=dtype, mode=mode,
+                                      slots=resolve_slots(k, arch), trace=t,
+                                      admission=adm), k, arch)
                          for k, t, adm in itertools.product(
                              self.slots, self.traces, self.admissions)]
             elif task == "loadgen":
                 if mode not in SERVE_MODES:
                     continue      # loadgen drives the serve engine: same modes
-                cells = [Scenario(arch=arch, task=task, batch=batch, seq=seq,
-                                  dtype=dtype, mode=mode,
-                                  slots=resolve_slots(k, arch), trace=t,
-                                  load=ld, split=sp, admission=adm)
+                cells = [mark_auto(
+                             Scenario(arch=arch, task=task, batch=batch,
+                                      seq=seq, dtype=dtype, mode=mode,
+                                      slots=resolve_slots(k, arch), trace=t,
+                                      load=ld, split=sp, admission=adm),
+                             k, arch)
                          for k, t, ld, sp, adm in itertools.product(
                              self.slots, self.traces, self.loads, self.splits,
                              self.admissions)]
@@ -345,8 +357,19 @@ class ScenarioMatrix:
                     continue
                 out.append(s)
         out = select_scenarios(out, self.filter, self.exclude)
+        names = {s.name for s in out}
+        self._fallback_cache = {n: r for n, r in fallbacks.items()
+                                if n in names}
         self._expand_cache = (key, out)
         return out
+
+    def slots_fallback(self) -> Dict[str, str]:
+        """Scenario name -> fallback reason for every expanded cell whose
+        ``slots="auto"`` resolution fell back to the default width (see
+        ``loadgen.auto_slots_info``).  Empty when every auto resolution
+        used a real measured curve (or no cell asked for auto)."""
+        self._expanded()
+        return dict(getattr(self, "_fallback_cache", {}))
 
     def expand(self) -> List[Scenario]:
         return list(self._expanded())   # callers may mutate their copy

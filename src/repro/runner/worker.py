@@ -121,7 +121,7 @@ def _hook_from(slowdown_s: float, leak_bytes: int):
 
 
 def _run_cell(runner, scenario, hook, runs, warmup, lock_path,
-              profile=False):
+              profile=False, extra=None):
     """One cell, with the measurement fence when a lock path is given:
     warm pass unfenced (build/compile/threading overlap across workers),
     timed loop under the exclusive lock (contention-free measurement)."""
@@ -130,17 +130,17 @@ def _run_cell(runner, scenario, hook, runs, warmup, lock_path,
     # other workers), and the fenced re-run replays it on the warm engine
     if not (lock_path and runner.reuse):
         return runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
-                          record=False, profile=profile)
+                          record=False, profile=profile, extra=extra)
     # a profiled warm pass pays the attribution AOT compile here, unfenced
     # (it caches per executable), so the fenced profiled re-measure below
     # never holds the lock through an XLA compile
     warm = runner.run(scenario, runs=1, warmup=0, record=False,
-                      profile=profile)
+                      profile=profile, extra=extra)
     if warm.status != "ok":
         return warm
     with _file_lock(lock_path):
         rr = runner.run(scenario, hook=hook, runs=runs, warmup=warmup,
-                        record=False, profile=profile)
+                        record=False, profile=profile, extra=extra)
     if rr.status == "ok":
         # the fenced re-measure hit the warm pass's cache: report the
         # cell's true build/compile provenance instead
@@ -164,11 +164,30 @@ def _handle_job(runner, msg: dict, args) -> dict:
     hook_params = msg.get("hook") or {}
     hook = _hook_from(hook_params.get("slowdown_s", 0.0),
                       hook_params.get("leak_bytes", 0))
-    rr = _run_cell(runner, scenario, hook, msg.get("runs"),
-                   msg.get("warmup"), args.measure_lock,
-                   profile=bool(msg.get("profile") or args.profile))
+    tctx = msg.get("trace")
+    tracer = None
+    if tctx:
+        # a per-job tracer seeded with the dispatcher's span context: this
+        # cell's spans parent to the coordinator-side dispatch span and
+        # ship back in the reply (the dispatcher relabels the lane)
+        from repro.telemetry.spans import Tracer
+        tracer = Tracer(trace_id=tctx.get("trace_id"),
+                        proc=f"worker-{os.getpid()}",
+                        root_parent=tctx.get("parent") or None)
+        runner.tracer = tracer
+    try:
+        rr = _run_cell(runner, scenario, hook, msg.get("runs"),
+                       msg.get("warmup"), args.measure_lock,
+                       profile=bool(msg.get("profile") or args.profile),
+                       extra=msg.get("extra"))
+    finally:
+        if tracer is not None:
+            from repro.telemetry.spans import NULL_TRACER
+            runner.tracer = NULL_TRACER
     reply = {"op": "result", "result": rr.to_dict(),
              "stats": runner.stats.to_dict()}
+    if tracer is not None:
+        reply["spans"] = tracer.export()
     if "cell" in msg:
         reply["cell"] = msg["cell"]
     return reply

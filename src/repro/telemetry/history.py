@@ -1,0 +1,172 @@
+"""Provenance-keyed time series over ``ResultStore.history()``.
+
+The append-only run log already survives months of concurrent
+appenders; this module turns it into a queryable trajectory:
+
+- :func:`series` groups full history records by
+  ``(scenario name, provenance key)`` — records without ``prov_*``
+  extras (e.g. ``MetricStore`` baseline rows) are not trajectory points
+  and are skipped.
+- :func:`rolling_baseline` / :func:`drift` give each series a rolling
+  median baseline and flag the newest point against it, reusing the
+  paper's 7% ``core/regression.detect`` threshold and metric set.
+- :func:`trajectory` ranks the drifts across every series into a
+  ``profiler/report.py`` report (same JSON shape and text table as the
+  inefficiency findings), so nightly trend review reads like the
+  profiler's.
+
+``core/ci.py run_nightly`` appends one provenance-stamped point per
+cell each night; ``benchmarks/history_report.py`` renders the view.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.regression import METRICS, THRESHOLD, Issue
+from repro.profiler.detectors import Finding
+from repro.profiler.report import build_report
+from repro.telemetry.provenance import provenance_key
+
+__all__ = ["series", "rolling_baseline", "drift", "trajectory",
+           "SERIES_METRICS"]
+
+#: metric fields carried into each series point (superset of the
+#: regression metric tuple, so serve/throughput trends are visible too)
+SERIES_METRICS = ("median_us", "mean_us", "compile_us", "host_peak_bytes",
+                  "device_bytes_delta")
+
+SeriesKey = Tuple[str, str]            # (scenario name, provenance key)
+
+
+def _result_store(store: Any):
+    """Accept a ``ResultStore`` or anything wrapping one (``MetricStore``)."""
+    return getattr(store, "_store", store)
+
+
+def _point(rec: Dict[str, Any]) -> Dict[str, Any]:
+    extra = rec.get("extra") or {}
+    pt = {"ts": float(rec.get("ts", 0.0)),
+          "status": rec.get("status", "ok")}
+    for m in SERIES_METRICS:
+        v = rec.get(m)
+        if isinstance(v, (int, float)):
+            pt[m] = float(v)
+    for k in ("tok_per_s", "prov_commit", "prov_dirty"):
+        if k in extra:
+            pt[k] = extra[k]
+    return pt
+
+
+def series(store: Any, *, name: Optional[str] = None
+           ) -> Dict[SeriesKey, List[Dict[str, Any]]]:
+    """Group the run log into per-(scenario, provenance) series, each
+    sorted by timestamp.  Only records carrying provenance extras
+    qualify — the log may interleave baseline rows and foreign records."""
+    out: Dict[SeriesKey, List[Dict[str, Any]]] = {}
+    for rec in _result_store(store).history(name):
+        extra = rec.get("extra")
+        if not isinstance(extra, dict) or "prov_commit" not in extra:
+            continue
+        rec_name = rec.get("name")
+        if not rec_name:
+            continue
+        key = (str(rec_name), provenance_key(extra))
+        out.setdefault(key, []).append(_point(rec))
+    for pts in out.values():
+        pts.sort(key=lambda p: p["ts"])
+    return out
+
+
+def rolling_baseline(points: List[Dict[str, Any]], *, window: int = 5,
+                     metrics: Iterable[str] = METRICS) -> Dict[str, float]:
+    """Median of the last *window* ok points per metric (the rolling
+    baseline the newest point is judged against)."""
+    ok = [p for p in points if p.get("status") == "ok"]
+    tail = ok[-window:]
+    base: Dict[str, float] = {}
+    for m in metrics:
+        vals = sorted(p[m] for p in tail if isinstance(p.get(m), float))
+        if vals:
+            base[m] = vals[len(vals) // 2]
+    return base
+
+
+def drift(points: List[Dict[str, Any]], *, threshold: float = THRESHOLD,
+          window: int = 5, metrics: Iterable[str] = METRICS,
+          benchmark: str = "") -> List[Issue]:
+    """Flag the newest ok point against the rolling baseline of the
+    points before it.  Same semantics as ``regression.detect`` (relative
+    increase past *threshold*), so CI and trajectory review agree."""
+    ok = [p for p in points if p.get("status") == "ok"]
+    if len(ok) < 2:
+        return []
+    base = rolling_baseline(ok[:-1], window=window, metrics=metrics)
+    newest = ok[-1]
+    issues: List[Issue] = []
+    for m in metrics:
+        b = base.get(m)
+        o = newest.get(m)
+        if not b or o is None or b <= 0:
+            continue
+        inc = (o - b) / b
+        if inc > threshold:
+            issues.append(Issue(benchmark=benchmark, metric=m, baseline=b,
+                                observed=o, increase=inc))
+    return issues
+
+
+def _severity(increase: float, threshold: float) -> str:
+    return "crit" if increase > 4 * threshold else "warn"
+
+
+def trajectory(store: Any, *, window: int = 5, threshold: float = THRESHOLD,
+               min_points: int = 2) -> Dict[str, Any]:
+    """The ranked drift report over every provenance-keyed series.
+
+    Returns a ``profiler/report.py``-shaped dict; render it with
+    ``profiler.report.format_table``.  ``meta["series"]`` summarises
+    each qualifying series (first/last value, trend) so the report is
+    useful even when nothing drifted.
+    """
+    ser = series(store)
+    findings: List[Finding] = []
+    summaries: List[Dict[str, Any]] = []
+    records: List[Dict[str, Any]] = []
+    for (name, prov), points in sorted(ser.items()):
+        if len(points) < min_points:
+            continue
+        ok = [p for p in points if p.get("status") == "ok"]
+        med = [p.get("median_us") for p in ok
+               if isinstance(p.get("median_us"), float)]
+        summaries.append({
+            "name": name,
+            "provenance": prov,
+            "points": len(points),
+            "ok": len(ok),
+            "first_median_us": med[0] if med else None,
+            "last_median_us": med[-1] if med else None,
+            "trend": ((med[-1] - med[0]) / med[0]
+                      if len(med) >= 2 and med[0] > 0 else 0.0),
+        })
+        records.append({"name": name, "status": "ok" if ok else "error"})
+        for issue in drift(points, threshold=threshold, window=window,
+                           benchmark=name):
+            findings.append(Finding(
+                rule="perf_drift",
+                severity=_severity(issue.increase, threshold),
+                cell=name,
+                summary=(f"{issue.metric} +{issue.increase:.0%} vs rolling "
+                         f"baseline ({issue.baseline:.1f} -> "
+                         f"{issue.observed:.1f})"),
+                score=issue.increase,
+                evidence={"provenance": prov, "metric": issue.metric,
+                          "baseline": issue.baseline,
+                          "observed": issue.observed,
+                          "points": len(points), "window": window},
+            ))
+    sev_rank = {"crit": 0, "warn": 1, "info": 2}
+    findings.sort(key=lambda f: (sev_rank.get(f.severity, 3), -f.score))
+    return build_report(records, findings,
+                        meta={"kind": "trajectory", "window": window,
+                              "threshold": threshold,
+                              "series": summaries})
