@@ -24,8 +24,8 @@ import json
 from benchmarks.common import emit, make_runner, results_path
 from repro.profiler import build_report, detect, format_table
 from repro.runner import ScenarioMatrix
-from repro.tuning import (cases_from_jobs, enqueue_jobs, jobs_from_findings,
-                          load_queue, run_sweep)
+from repro.tuning import enqueue_jobs, jobs_from_findings
+from repro.tuning import drain_queue as tuning_drain_queue
 
 STEP_ARCHS = ["gemma-2b", "mamba2-2.7b", "recurrentgemma-9b", "mixtral-8x7b"]
 
@@ -62,38 +62,28 @@ def _prof_summary(rec: dict) -> dict:
 def drain_queue(runner=None, queue_path=None) -> dict:
     """Sweep every queued tuning job and empty the queue.
 
-    The queue (``results/tuning_queue.json``) holds jobs a previous
-    report's detectors enqueued; this turns them into kernel micro-bench
-    cells via the existing bridge (``cases_from_jobs`` -> ``run_sweep``)
-    and records the winners in the tuning DB.  The queue is emptied
-    afterwards — malformed jobs are dropped with it (re-running a
-    detector re-enqueues anything still relevant)."""
+    Thin formatter over ``repro.tuning.drain_queue`` (the core is in the
+    tuning layer so the fleet scheduler drains the same queue on its own
+    cadence): emits the CSV rows and human comments this script's
+    contract promises."""
     queue_path = queue_path or results_path("tuning_queue.json")
-    jobs = load_queue(queue_path)
-    cases = cases_from_jobs(jobs)
+    out = tuning_drain_queue(runner or make_runner(), queue_path=queue_path)
     emit("profile_report/drain_queue", 0.0,
-         f"jobs={len(jobs)};cases={len(cases)};queue={queue_path}")
-    if not cases:
+         f"jobs={out['jobs']};cases={out['cases']};queue={queue_path}")
+    if not out["cases"]:
         print(f"# tuning queue empty ({queue_path}); nothing to drain")
-        return {"jobs": len(jobs), "cases": 0}
-    runner = runner or make_runner()
-    summary = run_sweep(cases, runner)
-    for c in summary["cases"]:
+        return {"jobs": out["jobs"], "cases": 0}
+    for c in out["case_rows"]:
         ratio = c.get("ratio")
         note = f"status={c['status']}"
         if ratio:
             note += f";ratio={ratio:.3f}"
         emit(f"profile_report/drained/{c['case']}",
              c.get("winner_us") or 0.0, note)
-    # all jobs were attempted: rewrite the queue empty (enqueue_jobs
-    # merges, so write the schema-tagged empty payload directly)
-    from repro.tuning.bridge import QUEUE_SCHEMA_KEY, QUEUE_SCHEMA_VERSION
-    with open(queue_path, "w") as f:
-        json.dump({QUEUE_SCHEMA_KEY: QUEUE_SCHEMA_VERSION, "jobs": []}, f)
-    print(f"# drained {len(cases)} tuning jobs -> {summary['db_path']} "
-          f"({summary['recorded']} winners recorded)")
-    return {"jobs": len(jobs), "cases": len(cases),
-            "recorded": summary["recorded"], "db": summary["db_path"]}
+    print(f"# drained {out['cases']} tuning jobs -> {out['db_path']} "
+          f"({out['recorded']} winners recorded)")
+    return {"jobs": out["jobs"], "cases": out["cases"],
+            "recorded": out["recorded"], "db": out["db_path"]}
 
 
 def main(fast: bool = False, runner=None) -> None:

@@ -83,6 +83,15 @@ traced end to end and the stitched Chrome trace is persisted as the
 ratio says whether pipelining pays, the trace shows exactly where —
 dispatch spans overlapping on the coordinator lane vs back-to-back.
 
+Part 9 — metrics-registry overhead: the same warm cell measured with
+the fleet metrics registry (``repro.fleet.metrics``) enabled — the
+default; every execution feeds it — and disabled.  The registry's
+``record_result`` is a handful of dict increments under one lock,
+entirely outside the timed measurement loop, so both the median-step
+ratio and the end-to-end ``run()`` wall ratio must be ~1.0x — the
+"near-zero cost when unexported" acceptance bound, kept in the perf
+trajectory like the profiler tax of part 4.
+
 Numbers land in ``results/runner_bench.json``."""
 from __future__ import annotations
 
@@ -374,6 +383,31 @@ def main(fast: bool = False, runner=None) -> None:
     del prof_runner
     gc.collect()
 
+    # metrics-registry overhead: the same warm-cell protocol as the
+    # profiler tax above, enabled vs disabled registry; run() wall is
+    # timed too because record_result lands outside the measured loop
+    from repro.fleet.metrics import set_enabled
+    met_runner = BenchmarkRunner(runs=max(3, runs))
+    met_runner.run(sc, record=False)                     # compile + settle
+    t0 = time.perf_counter()
+    on_rr = met_runner.run(sc, record=False)
+    on_wall = time.perf_counter() - t0
+    prev_enabled = set_enabled(False)
+    try:
+        t0 = time.perf_counter()
+        off_rr = met_runner.run(sc, record=False)
+        off_wall = time.perf_counter() - t0
+    finally:
+        set_enabled(prev_enabled)
+    metrics_ratio = (on_rr.median_us / off_rr.median_us
+                     if off_rr.median_us else 0.0)
+    metrics_wall_ratio = on_wall / off_wall if off_wall else 0.0
+    emit("runner_bench/metrics_overhead", 0.0,
+         f"{metrics_ratio:.3f}x;wall={metrics_wall_ratio:.3f}x;"
+         f"enabled={on_rr.median_us:.0f}us;disabled={off_rr.median_us:.0f}us")
+    del met_runner
+    gc.collect()
+
     # scheduling strategies: static LPT vs dynamic stealing vs cluster
     # local:2 on the skew-weighted matrix (see module docstring, part 5)
     # the slowdown must make the hooked group cost ~2x a normal group
@@ -511,6 +545,11 @@ def main(fast: bool = False, runner=None) -> None:
                                "base_median_us": base_rr.median_us,
                                "profiled_median_us": prof_rr.median_us,
                                "overhead_ratio": overhead},
+                   "metrics": {"cell": sc.name,
+                               "enabled_median_us": on_rr.median_us,
+                               "disabled_median_us": off_rr.median_us,
+                               "overhead_ratio": metrics_ratio,
+                               "wall_ratio": metrics_wall_ratio},
                    "scheduling": {"cells": [s.name for s in skew_matrix],
                                   "jobs": JOBS, "slow_cell_s": slow_s,
                                   "static_lpt_s": static_s,

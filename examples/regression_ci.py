@@ -29,6 +29,7 @@ slowdown/leak parameters); the pool keeps worker caches warm across
 nights.
 """
 import argparse
+import os
 import sys
 import tempfile
 
@@ -45,7 +46,10 @@ def main(argv=None) -> int:
     ap.add_argument("--jobs", type=int, default=0,
                     help="shard nightly matrix runs across N worker subprocesses")
     args = ap.parse_args(argv)
-    store = MetricStore(tempfile.mktemp(suffix=".json"))
+    # a private mkdtemp dir, not the race-prone mktemp: the directory is
+    # ours atomically, so the store path inside it can't be hijacked
+    store = MetricStore(os.path.join(
+        tempfile.mkdtemp(prefix="regression_ci_"), "store.json"))
     archs = ["gemma-2b", "mamba2-2.7b"]
     # one runner for the whole CI day: nights and bisection probes share
     # cached arch builds and compiled executables (and, with --jobs, the
@@ -111,6 +115,23 @@ def _ci_day(store, archs, runner) -> int:
     for line in format_table(traj).splitlines():
         print(" ", line)
     assert traj["meta"]["series"], "expected >=2-point provenance series"
+
+    print("\n== fleet triage: drift -> re-measure -> bisect, ranked ==")
+    # the same trajectory drift findings, pushed through the fleet
+    # service's triage pass: each perf_drift cell is re-measured under
+    # the night's hooks (confirm or refute), confirmed ones bisected
+    # over the day's commits — the nightly pipeline scripts/fleet.py
+    # runs on every tick
+    from repro.fleet.triage import triage  # noqa: E402
+    scenarios = {sc.name: sc}
+    report = triage(traj, runner=runner, scenarios=scenarios, hooks=hooks,
+                    commits_for=lambda fd, s: commits,
+                    meta={"kind": "regression_ci"})
+    for line in format_table(report).splitlines():
+        print(" ", line)
+    assert any(f["rule"] == "regression_bisected"
+               and f["evidence"]["culprit"] == "c08"
+               for f in report["findings"]), "triage must re-find c08"
     print(f"runner stats: {runner.stats.to_dict()}")
     return 0
 

@@ -269,4 +269,64 @@ for (name, prov), pts in sorted(two_point.items()):
 print("history gate OK")
 EOF
 
+echo "== fleet gate: 2 supervised ticks, injected regression -> confirm + bisect =="
+python scripts/fleet.py --ticks 2 --fast --results-dir results
+python - <<'EOF'
+import json
+import re
+
+# status heartbeat: schema-tagged, fresh per tick, counters monotonic
+with open("results/fleet_status.json") as f:
+    status = json.load(f)
+assert status.get("fleet_status") == 1, status.keys()
+ticks = status["ticks"]
+assert len(ticks) == 2, [t["tick"] for t in ticks]
+for t in ticks:
+    assert t["ts"] > 0 and t["cells"] >= 2 and "counters" in t, t
+c0, c1 = ticks[0]["counters"], ticks[1]["counters"]
+for key, v0 in c0.items():
+    assert c1.get(key, 0) >= v0, (key, v0, c1.get(key))
+assert c1["fleet_ticks_total"] == 2, c1
+assert status["open_findings"] >= 1, status["open_findings"]
+print(f"  status: {len(ticks)} ticks, counters monotonic "
+      f"({len(c1)} tracked), open={status['open_findings']}")
+
+# triage report: the injected tick-2 regression was re-measured,
+# confirmed, and bisected to the synthetic culprit
+with open("results/fleet_report.json") as f:
+    report = json.load(f)
+rules = [fd["rule"] for fd in report["findings"]]
+assert "regression_confirmed" in rules, rules
+bisected = [fd for fd in report["findings"]
+            if fd["rule"] == "regression_bisected"]
+assert bisected, rules
+for fd in bisected:
+    assert fd["evidence"]["culprit"] == "c08", fd["evidence"]
+print(f"  report: {rules.count('regression_confirmed')} confirmed, "
+      f"{len(bisected)} bisected to c08")
+
+# the stride-gated autotuner drain emptied the seeded queue
+with open("results/tuning_queue.json") as f:
+    queue = json.load(f)
+assert queue["jobs"] == [], queue["jobs"]
+assert c1.get("fleet_drained_jobs_total", 0) >= 1, c1
+
+# Prometheus exposition parses line-by-line
+sample = re.compile(r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? '
+                    r'[-+0-9.eE]+(nan|inf)?$')
+with open("results/fleet_metrics.prom") as f:
+    lines = [ln for ln in f.read().splitlines() if ln]
+values = {}
+for ln in lines:
+    if ln.startswith("#"):
+        continue
+    assert sample.match(ln), f"bad prometheus line: {ln!r}"
+    name = ln.split("{")[0].split(" ")[0]
+    values.setdefault(name, float(ln.rsplit(" ", 1)[1]))
+assert values.get("fleet_cells_total", 0) > 0, values
+print(f"  prometheus: {len(lines)} lines, "
+      f"{len(values)} series, cells={values['fleet_cells_total']:.0f}")
+print("fleet gate OK")
+EOF
+
 echo "smoke OK"

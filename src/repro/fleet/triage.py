@@ -1,0 +1,135 @@
+"""Drift triage: automatic re-measure, confirmation, and bisection.
+
+A trajectory drift finding is a *suspicion* — one slow point against a
+rolling baseline, which on a shared host is as likely to be noise as a
+regression.  Triage graduates suspicions to confirmed regressions:
+
+1. **re-measure** — the flagged cell is run again, fresh, through the
+   same runner (same process => same cached provenance key, so the
+   re-measure lands in the same series the drift was detected in); the
+   delta must reproduce above the threshold;
+2. **bisect** — when the caller can supply a commit range
+   (``commits_for``), ``core/regression.bisect_commits`` binary-searches
+   the culprit at half the confirmed increase (so suite noise can't
+   flag a good commit);
+3. **rank** — confirmed / refuted / bisected outcomes become
+   ``profiler/report.py`` findings (``regression_confirmed`` crit/warn,
+   ``regression_bisected`` crit, ``drift_refuted`` info), ranked
+   severity-then-score into the ``results/fleet_report.json`` shape.
+
+Re-measures run with ``record=False`` and are never logged to the
+history store — each cell keeps exactly one history point per tick.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.regression import THRESHOLD, bisect_commits
+from repro.fleet.metrics import registry
+from repro.profiler.detectors import SEVERITIES, Finding
+from repro.profiler.report import build_report
+
+#: rules this module emits, most severe first
+TRIAGE_RULES = ("regression_bisected", "regression_confirmed",
+                "drift_unverified", "drift_refuted")
+
+
+def triage(drift_report: Dict[str, Any], *, runner,
+           scenarios: Dict[str, Any],
+           hooks: Optional[Dict[str, Any]] = None,
+           threshold: float = THRESHOLD,
+           remeasure_runs: Optional[int] = None,
+           commits_for: Optional[Callable[[dict, Any], Optional[list]]] = None,
+           meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Re-measure every ``perf_drift`` finding in a trajectory report and
+    rank the outcomes into a ``build_report``-shaped triage report.
+
+    ``scenarios`` maps scenario name -> ``Scenario`` (the scheduler's
+    expanded matrix); ``hooks`` are the *currently active* run_matrix
+    hooks, keyed by scenario name or bench, so the re-measure sees the
+    same world the flagged tick did.  ``commits_for(finding, scenario)``
+    returns the ``core.regression.Commit`` range to bisect (or None).
+    """
+    reg = registry()
+    hooks = hooks or {}
+    findings: List[Finding] = []
+    records: List[Any] = []
+    confirmed = refuted = bisected = 0
+    for fd in drift_report.get("findings", []):
+        if fd.get("rule") != "perf_drift":
+            continue
+        cell = fd.get("cell", "")
+        evidence = dict(fd.get("evidence") or {})
+        metric = evidence.get("metric", "median_us")
+        baseline = float(evidence.get("baseline") or 0.0)
+        sc = scenarios.get(cell)
+        if sc is None or baseline <= 0.0:
+            findings.append(Finding(
+                rule="drift_unverified", severity="info", cell=cell,
+                summary=f"cannot re-measure {metric} drift "
+                        f"(unknown cell or empty baseline)",
+                score=float(fd.get("score") or 0.0), evidence=evidence))
+            continue
+        hook = hooks.get(sc.name) or hooks.get(sc.bench)
+        rr = runner.run(sc, runs=remeasure_runs, hook=hook, record=False)
+        reg.inc("fleet_remeasures_total")
+        records.append(rr)
+        observed = rr.metrics().get(metric, 0.0) if rr.status == "ok" else 0.0
+        increase = (observed - baseline) / baseline if observed else 0.0
+        if rr.status == "ok" and increase > threshold:
+            confirmed += 1
+            reg.inc("fleet_confirmed_total")
+            findings.append(Finding(
+                rule="regression_confirmed",
+                severity=fd.get("severity", "warn"), cell=cell,
+                summary=f"{metric} +{increase:.0%} reproduced on re-measure "
+                        f"(baseline {baseline:.0f}, observed {observed:.0f})",
+                score=increase,
+                evidence={**evidence, "remeasured": observed,
+                          "increase": increase}))
+            commits = commits_for(fd, sc) if commits_for else None
+            if commits:
+                trace: List[str] = []
+                reg.inc("fleet_bisects_total")
+                culprit = bisect_commits(
+                    commits, sc.bench, metric, baseline,
+                    threshold=max(threshold, increase / 2), trace=trace)
+                if culprit is not None:
+                    bisected += 1
+                    findings.append(Finding(
+                        rule="regression_bisected", severity="crit",
+                        cell=cell,
+                        summary=f"bisected {metric} regression to "
+                                f"{culprit.sha} "
+                                f"({len(trace)} measurements of "
+                                f"{len(commits)} commits)",
+                        score=increase,
+                        evidence={"culprit": culprit.sha, "metric": metric,
+                                  "baseline": baseline,
+                                  "measurements": len(trace),
+                                  "commits": len(commits),
+                                  "bisect_trace": trace}))
+        else:
+            refuted += 1
+            reg.inc("fleet_refuted_total")
+            findings.append(Finding(
+                rule="drift_refuted", severity="info", cell=cell,
+                summary=f"{metric} drift did not reproduce "
+                        f"(baseline {baseline:.0f}, re-measured "
+                        f"{observed:.0f}, status {rr.status})",
+                score=max(increase, 0.0),
+                evidence={**evidence, "remeasured": observed,
+                          "increase": increase, "status": rr.status}))
+    rank = {s: i for i, s in enumerate(SEVERITIES)}
+    findings.sort(key=lambda f: (rank.get(f.severity, len(SEVERITIES)),
+                                 -f.score))
+    reg.set_gauge("fleet_open_findings",
+                  sum(1 for f in findings
+                      if f.rule in ("regression_confirmed",
+                                    "regression_bisected")))
+    return build_report(records, findings, meta={
+        "kind": "fleet_triage",
+        "drift_findings": len(drift_report.get("findings", [])),
+        "confirmed": confirmed, "refuted": refuted, "bisected": bisected,
+        **(meta or {}),
+    })

@@ -275,6 +275,7 @@ class ServeEngine:
         ttft_s: List[float] = []
         tok_lat_s: List[float] = []
         qdepth: List[int] = []
+        waves = 0
         t0 = time.perf_counter()
         while done_count < total:
             now = time.perf_counter()
@@ -296,6 +297,7 @@ class ServeEngine:
                 pairs = list(zip(free, waiting))
                 if pairs:
                     del waiting[: len(pairs)]
+                    waves += 1
                     tw = time.time() if span_log is not None else 0.0
                     firsts = self._admit_wave(pairs)
                     if span_log is not None:
@@ -362,6 +364,18 @@ class ServeEngine:
                     done_count += 1
         wall = time.perf_counter() - t0
         ab = self._admit_batches
+        # fleet metrics: folded ONCE per replay (never per decode step) —
+        # admission control-path counters + the end-of-replay KV fill
+        from repro.fleet.metrics import registry as metrics_registry
+        reg = metrics_registry()
+        reg.inc("serve_admit_waves_total", waves)
+        reg.inc("serve_admit_calls_total", self._admit_calls)
+        reg.inc("serve_bucket_compiles_total",
+                len(self._admit_shapes) - shapes0)
+        reg.inc("serve_decode_steps_total", self.steps)
+        reg.set_gauge("serve_kv_occupancy",
+                      float(np.mean(self.slot_pos)) / self.max_len
+                      if self.max_len else 0.0)
         return {"requests": total, "decode_steps": self.steps,
                 "tokens": tokens_out, "wall_s": wall,
                 "tok_per_s": tokens_out / wall if wall else 0.0,

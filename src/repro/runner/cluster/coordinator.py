@@ -37,6 +37,7 @@ import socket
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.fleet.metrics import registry as metrics_registry
 from repro.runner.pool import rank_groups
 from repro.runner.protocol import Channel, job_message, stats_delta
 from repro.runner.results import RunResult
@@ -58,6 +59,9 @@ class _WorkerConn:
         self.last_seen = time.monotonic()
         self.connected_at = self.last_seen
         self.stats_seen: Dict[str, int] = {}
+        # same delta-merge protocol for the worker's metrics registry
+        # (flat cumulative counters; see repro.fleet.metrics)
+        self.metrics_seen: Dict[str, float] = {}
         # the group this worker currently owns (unsent cell indices) and
         # its in-flight cells (index -> dispatch time, for deadlines)
         self.group: List[int] = []
@@ -216,7 +220,14 @@ class Coordinator:
             try:
                 msgs = conn.chan.pump()
                 if msgs:
-                    conn.last_seen = time.monotonic()
+                    now = time.monotonic()
+                    if conn.registered:
+                        # silence since the last message from this worker —
+                        # the live heartbeat-gap distribution
+                        metrics_registry().observe(
+                            "cluster_heartbeat_gap_seconds",
+                            now - conn.last_seen)
+                    conn.last_seen = now
                 for msg in msgs:
                     self._handle(conn, msg, queue, ctx, results,
                                  run_stats, done)
@@ -289,6 +300,11 @@ class Coordinator:
         delta = stats_delta(msg.get("stats"), conn.stats_seen)
         if delta:
             run_stats.merge(delta)
+        if msg.get("metrics"):
+            metrics_registry().merge_cumulative(
+                stats_delta(msg["metrics"], conn.metrics_seen))
+        metrics_registry().set_gauge(
+            f"cluster_inflight_{conn.ident()}", len(conn.inflight))
         ds = self._dspans.pop(idx, None)
         if ds is not None:
             self._tr.ingest(msg.get("spans"), proc=conn.ident())
@@ -332,6 +348,9 @@ class Coordinator:
                 if not queue:
                     return
                 conn.group = queue.popleft()    # steal the next group
+                reg = metrics_registry()
+                reg.inc("cluster_steals_total")
+                reg.set_gauge("cluster_queue_depth", len(queue))
                 if self._tr.enabled:
                     if conn.gspan is not None:
                         self._tr.finish(conn.gspan)
@@ -402,6 +421,7 @@ class Coordinator:
         scenarios, _, _, _, _, on_result = ctx
         self._conns.remove(conn)
         conn.chan.close()
+        metrics_registry().inc("cluster_retires_total")
         now = time.monotonic()
         for idx, t0 in sorted(conn.inflight.items()):
             if results[idx] is not None:

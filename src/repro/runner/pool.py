@@ -57,6 +57,7 @@ import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.fleet.metrics import registry as metrics_registry
 from repro.runner.protocol import Channel, job_message, stats_delta
 from repro.runner.results import RunResult
 from repro.runner.scenario import Scenario
@@ -151,6 +152,9 @@ class _Worker:
         # on the worker (NOT per run() call) because the process — and its
         # monotonically growing counters — persists across run() calls
         self.stats_seen: Dict[str, int] = {}
+        # same delta-merge protocol for the worker's metrics registry
+        # (flat cumulative counters; see repro.fleet.metrics)
+        self.metrics_seen: Dict[str, float] = {}
         self.stats_gen = -1
         self.stderr_path = ""
 
@@ -165,6 +169,8 @@ class _Worker:
             os.close(fd)
             self.chan = Channel.over_pipes(self.proc.stdout, self.proc.stdin)
             self.generation += 1
+            if self.generation > 1:
+                metrics_registry().inc("pool_respawns_total")
         return self.proc
 
     def send(self, msg: dict) -> None:
@@ -263,6 +269,11 @@ class ShardScheduler:
 
     # ---- lifecycle -------------------------------------------------------
 
+    def worker_pids(self) -> List[int]:
+        """PIDs of the currently-spawned shard workers (the no-orphans
+        gate: after ``close()`` each must be dead)."""
+        return [w.proc.pid for w in self._workers if w.proc is not None]
+
     def close(self) -> None:
         for worker in self._workers:
             worker.kill(grace=2.0)
@@ -358,6 +369,10 @@ class ShardScheduler:
                     if not queue:
                         return
                     group = queue.popleft()   # steal the next ranked group
+                    depth = len(queue)
+                reg = metrics_registry()
+                reg.inc("pool_steals_total")
+                reg.set_gauge("pool_queue_depth", depth)
                 continue
             gspan = None
             if tracer.enabled and group:
@@ -393,19 +408,21 @@ class ShardScheduler:
             if worker.generation != worker.stats_gen:
                 worker.stats_gen = worker.generation
                 worker.stats_seen = {}   # fresh interpreter: from zero
+                worker.metrics_seen = {}
             hook = hooks.get(sc.name) or hooks.get(sc.bench)
             job = job_message(sc, runs=runs, warmup=warmup,
                               profile=profile, hook=hook,
                               trace=tracer.context(ds), extra=extra)
-            rr, stats, spans = self._round_trip(worker, job)
+            rr, stats, metrics, spans = self._round_trip(worker, job)
         except Exception as e:  # noqa: BLE001 — e.g. spawn ENOMEM: the
-            rr, stats, spans = None, None, None  # keep emitting records
+            rr, stats, metrics, spans = None, None, None, None  # keep emitting
             reason = f"shard worker {worker.idx} dispatch failed: {e!r}"
         else:
             reason = None if rr is not None else \
                 worker.death_reason(self.timeout)
         if rr is None:
             worker.kill()
+            metrics_registry().inc("pool_worker_deaths_total")
             rr = RunResult.from_error(sc, reason,
                                       wall_s=time.perf_counter() - t0)
             if extra:
@@ -420,6 +437,9 @@ class ShardScheduler:
             if delta:
                 with self._lock:
                     run_stats.merge(delta)
+            if metrics:
+                metrics_registry().merge_cumulative(
+                    stats_delta(metrics, worker.metrics_seen))
         if ds is not None:
             tracer.ingest(spans, proc=f"shard{worker.idx}")
             ds.set(status=rr.status)
@@ -437,14 +457,14 @@ class ShardScheduler:
 
     def _round_trip(self, worker: _Worker, job: dict):
         """Send one job, read its result (which carries the worker's
-        cumulative stats + traced spans); (None, None, None) when the
-        worker dies or hangs."""
+        cumulative stats, metrics-registry counters, and traced spans);
+        all-None when the worker dies or hangs."""
         try:
             worker.send(job)
             msg = worker.recv(self.timeout)
         except (OSError, ValueError):
-            return None, None, None
+            return None, None, None, None
         if not msg or msg.get("op") != "result":
-            return None, None, None
+            return None, None, None, None
         return (RunResult.from_dict(msg["result"]), msg.get("stats"),
-                msg.get("spans"))
+                msg.get("metrics"), msg.get("spans"))

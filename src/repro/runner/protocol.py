@@ -26,17 +26,25 @@ Every message is one JSON object per ``\\n``-terminated line.  Kinds
                                      (dispatch-side annotations, e.g.
                                      ``slots_fallback``).
     result    worker -> dispatcher   {"op": "result", "result": <RunResult>,
-                                      "stats": <RunnerStats>, "cell": i?,
+                                      "stats": <RunnerStats>,
+                                      "metrics": {...}?, "cell": i?,
                                       "spans": [...]?}
                                      ``stats`` is the worker's CUMULATIVE
                                      counter snapshot (the dispatcher
                                      delta-merges, see ``stats_delta``);
-                                     ``cell`` echoes the job's id so a
-                                     pipelined dispatcher can match
-                                     results to cells; ``spans`` (only
-                                     when the job carried ``trace``) is
-                                     the worker-side span export for the
-                                     dispatcher to stitch into its trace.
+                                     ``metrics`` is the worker's metrics
+                                     registry as flat cumulative counters
+                                     (``repro.fleet.metrics
+                                     .counters_cumulative``), delta-merged
+                                     by the dispatcher with the same
+                                     ``stats_delta`` arithmetic into its
+                                     own registry; ``cell`` echoes the
+                                     job's id so a pipelined dispatcher
+                                     can match results to cells; ``spans``
+                                     (only when the job carried ``trace``)
+                                     is the worker-side span export for
+                                     the dispatcher to stitch into its
+                                     trace.
     register  worker -> dispatcher   {"op": "register", "host": str,
                                       "capacity": int}   (socket only:
                                      first message after connecting)

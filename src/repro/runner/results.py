@@ -84,6 +84,38 @@ Matrix-expansion annotations:
                                   Absent when a real measured curve was
                                   used.
 
+Fleet / coverage annotations (still schema v1; the fleet perf-CI
+service ``src/repro/fleet/`` and the coverage-enabled runner):
+
+    extra["fleet_tick"]    int    the fleet scheduler tick that measured
+                                  this history point (``FleetScheduler``
+                                  stamps every record it logs into the
+                                  store, so a trajectory series can be
+                                  re-cut by tick as well as by time)
+    extra["cov_primitives"]     int   distinct jaxpr primitives the cell's
+                                  step traces to (``core/coverage``,
+                                  abstract trace — cached per scenario;
+                                  only on step cells of a
+                                  ``BenchmarkRunner(coverage=True)``)
+    extra["cov_new_primitives"] int   of those, how many this cell added
+                                  to the runner's suite-union frontier
+                                  (first cell of a sweep pays the whole
+                                  union; later cells count marginal
+                                  coverage — the paper's breadth metric
+                                  as a per-cell number).  The running
+                                  union size is the
+                                  ``fleet_cov_union_primitives`` gauge.
+
+Every execution also feeds the process-wide metrics registry
+(``repro.fleet.metrics``; counters/gauges/histograms, exported as the
+``{"fleet_metrics": 1, "ts", "counters", "gauges", "histograms"}``
+snapshot in ``results/fleet_status.json`` and as Prometheus text in
+``results/fleet_metrics.prom``).  Registry counters are *execution*
+counts, not record counts — the pool's measurement fence warms cells
+with an unfenced pass, so ``fleet_cells_total`` can exceed the number
+of records; histograms cross process boundaries as count/sum only
+(percentiles are always measuring-process-local).
+
 Serving cells (``task="serve"``, the continuous-batching engine in
 ``repro.launch.serve``) additionally carry the latency-distribution
 metrics production users compare (all latencies in **microseconds**,

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.harness import (Measurement, RegressionHook, measure,
                                 measure_eager, prepare)
 from repro.core.suite import Benchmark, Built, build_arch, get_benchmark
+from repro.fleet.metrics import registry as metrics_registry
 from repro.profiler.attribution import attribute, cost_for_executable
 from repro.profiler.timeline import Timeline, device_memory_stats
 from repro.runner.latency import percentile
@@ -84,7 +85,8 @@ class BenchmarkRunner:
                  reuse: bool = True, isolate: bool = False, jobs: int = 0,
                  measure_fence: bool = True, profile: bool = False,
                  cluster: str = "", steal: bool = True,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 coverage: bool = False):
         self.store = store
         self.runs = runs
         self.warmup = warmup
@@ -118,6 +120,14 @@ class BenchmarkRunner:
         # spans under their dispatch span via the job protocol; the
         # default NULL_TRACER makes every span site a cheap no-op
         self.tracer = tracer or NULL_TRACER
+        # API-surface coverage annotations (opt-in, serial in-process step
+        # cells only): trace each scenario's step once through
+        # core.coverage.jaxpr_primitives and attach extra["cov_*"] counts;
+        # the process-wide union feeds the metrics-snapshot gauge.  The
+        # trace is cached per scenario, so re-measures pay nothing.
+        self.coverage = coverage
+        self._cov_cache: Dict[Scenario, frozenset] = {}
+        self._cov_union: set = set()
         # session-level scenario selection (the CLI --filter/--exclude
         # regexes), applied on top of each matrix's own selection
         self.default_filter: Tuple[str, ...] = ()
@@ -154,6 +164,16 @@ class BenchmarkRunner:
         "local:N"``), empty when no cluster is active or it binds for
         external workers — the smoke gate's no-orphans check."""
         return [] if self._cluster is None else self._cluster.worker_pids()
+
+    def worker_pids(self) -> List[int]:
+        """PIDs of every worker subprocess this runner has live — the
+        ``--jobs`` shard pool plus local cluster workers.  The no-orphans
+        gate: after ``close()`` each of these must be dead."""
+        pids: List[int] = []
+        if self._pool is not None:
+            pids.extend(self._pool.worker_pids())
+        pids.extend(self.cluster_worker_pids())
+        return pids
 
     def __del__(self):
         try:
@@ -244,6 +264,11 @@ class BenchmarkRunner:
             try:
                 with tr.span("build", kind="phase"):
                     entry, cache = self._resolve(scenario)
+                # trace coverage before the measure: donated buffers are
+                # still live here (the jaxpr trace is abstract, but fresh
+                # args keep it valid on every mode)
+                cov = self._coverage_extra(scenario, entry) \
+                    if self.coverage else None
                 if scenario.mode == "eager":
                     with tr.span("measure", kind="phase"):
                         m = measure_eager(scenario.name, entry.step,
@@ -278,6 +303,8 @@ class BenchmarkRunner:
                     # nothing compiled on a cache hit; measure()'s first call
                     # timed an ordinary step, which is not a compile time
                     rr.compile_us = 0.0
+                if cov:
+                    rr.extra.update(cov)
                 if prof:
                     if scenario.mode == "eager":
                         rr.extra["prof_skipped"] = "eager"
@@ -309,9 +336,28 @@ class BenchmarkRunner:
             rr.extra["span_trace"] = tr.trace_id
             rr.extra["span_cell"] = cell_span.span_id
         stamp_provenance(rr)
+        metrics_registry().record_result(rr)
         if record and self.store is not None:
             self.store.append(rr)
         return rr
+
+    def _coverage_extra(self, scenario: Scenario,
+                        entry: _ExecEntry) -> Dict[str, int]:
+        """Per-scenario jaxpr-primitive counts (``extra["cov_*"]``) and the
+        process-union gauge — the cheap seed for the coverage loop."""
+        prims = self._cov_cache.get(scenario)
+        if prims is None:
+            from repro.core.coverage import jaxpr_primitives
+            try:
+                prims = frozenset(jaxpr_primitives(entry.step, *entry.args))
+            except Exception:   # noqa: BLE001 — coverage is advisory
+                prims = frozenset()
+            self._cov_cache[scenario] = prims
+        new = prims - self._cov_union
+        self._cov_union |= prims
+        metrics_registry().set_gauge("fleet_cov_union_primitives",
+                                     len(self._cov_union))
+        return {"cov_primitives": len(prims), "cov_new_primitives": len(new)}
 
     # ---- kernel micro-bench path (the autotuner's cells) -----------------
 
@@ -839,6 +885,9 @@ class BenchmarkRunner:
         # the worker stamped its own provenance (correct host/backend);
         # setdefault only fills locally-created error records
         stamp_provenance(rr)
+        # single-shot worker: its registry dies with it, so the parent
+        # counts the execution (unlike the pool/cluster delta-merge)
+        metrics_registry().record_result(rr)
         if record and self.store is not None:
             self.store.append(rr)
         return rr

@@ -184,8 +184,12 @@ def _handle_job(runner, msg: dict, args) -> dict:
         if tracer is not None:
             from repro.telemetry.spans import NULL_TRACER
             runner.tracer = NULL_TRACER
+    from repro.fleet.metrics import registry as metrics_registry
     reply = {"op": "result", "result": rr.to_dict(),
-             "stats": runner.stats.to_dict()}
+             "stats": runner.stats.to_dict(),
+             # this process's metrics registry as flat cumulative counters,
+             # delta-merged by the dispatcher exactly like the stats
+             "metrics": metrics_registry().counters_cumulative()}
     if tracer is not None:
         reply["spans"] = tracer.export()
     if "cell" in msg:

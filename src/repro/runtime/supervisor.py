@@ -127,14 +127,23 @@ class Supervisor:
     ``step_fn(state, step) -> state`` may raise (injected faults in tests,
     real XLA/host errors in production).  On failure the supervisor restores
     the latest checkpoint and replays from there.
+
+    ``backoff_s > 0`` sleeps before each replay, doubling per consecutive
+    restart (capped at 32x) — a crash-looping service must not hammer its
+    own scheduler.  ``sleep`` is injectable (a virtual clock in tests);
+    the default 0.0 keeps the original immediate-replay behaviour.
     """
 
     def __init__(self, ckpt_manager, *, save_every: int = 10, max_restarts: int = 5,
-                 monitor: Optional[HeartbeatMonitor] = None):
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 backoff_s: float = 0.0,
+                 sleep: Callable[[float], None] = time.sleep):
         self.ckpt = ckpt_manager
         self.save_every = save_every
         self.max_restarts = max_restarts
         self.monitor = monitor
+        self.backoff_s = backoff_s
+        self._sleep = sleep
         self.restarts = 0
         self.events: List[str] = []
 
@@ -157,6 +166,11 @@ class Supervisor:
                 self.events.append(f"fault@{step}:{type(e).__name__}")
                 if self.restarts > self.max_restarts:
                     raise RuntimeError(f"exceeded {self.max_restarts} restarts") from e
+                if self.backoff_s > 0:
+                    delay = min(self.backoff_s * (2 ** (self.restarts - 1)),
+                                32 * self.backoff_s)
+                    self.events.append(f"backoff@{step}:{delay:g}s")
+                    self._sleep(delay)
                 self.ckpt.wait()
                 restored, ck_step = self.ckpt.restore_latest(state)
                 if restored is None:

@@ -17,7 +17,7 @@ kernels' launch parameters:
   ``low_util``) -> enqueued tuning jobs, closing profile -> optimize.
 """
 from repro.tuning.bridge import (TUNE_RULES, cases_for_record,
-                                 cases_from_jobs, enqueue_jobs,
+                                 cases_from_jobs, drain_queue, enqueue_jobs,
                                  jobs_from_findings, kernels_for_arch,
                                  load_queue)
 from repro.tuning.db import TuningDB, tuned_params
@@ -28,7 +28,8 @@ from repro.tuning.sweep import run_sweep, sweep_matrix
 
 __all__ = [
     "TUNE_RULES", "TuningDB", "KernelCase", "candidate_id", "candidates",
-    "cases_for_record", "cases_from_jobs", "default_params", "enqueue_jobs",
+    "cases_for_record", "cases_from_jobs", "default_params", "drain_queue",
+    "enqueue_jobs",
     "jobs_from_findings", "kernels_for_arch", "load_queue", "make_case",
     "parse_candidate", "parse_case", "run_sweep", "sweep_matrix",
     "tuned_params", "vmem_bytes",

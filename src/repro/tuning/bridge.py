@@ -168,6 +168,39 @@ def enqueue_jobs(jobs: Sequence[dict],
     return p
 
 
+def drain_queue(runner, *, queue_path: Optional[Union[str, Path]] = None,
+                max_candidates: Optional[int] = None) -> dict:
+    """Sweep every queued tuning job through ``runner`` and empty the
+    queue — the core of ``benchmarks/profile_report --drain-queue``,
+    shared with the fleet scheduler's stride-gated drain.
+
+    Queued jobs become kernel micro-bench cells (``cases_from_jobs`` ->
+    ``tuning.sweep.run_sweep``); winners land in the ambient tuning DB
+    and the queue file is rewritten empty (malformed jobs are dropped
+    with it — re-running a detector re-enqueues anything still
+    relevant).  Returns ``{"jobs", "cases", "recorded", "db_path",
+    "case_rows"}``; ``case_rows`` are the per-case sweep summaries for
+    callers that format output."""
+    p = Path(queue_path) if queue_path is not None else default_queue_path()
+    jobs = load_queue(p)
+    cases = cases_from_jobs(jobs)
+    if not cases:
+        return {"jobs": len(jobs), "cases": 0, "recorded": 0,
+                "db_path": "", "case_rows": [], "queue_path": str(p)}
+    from repro.tuning.sweep import run_sweep
+    summary = run_sweep(cases, runner, max_candidates=max_candidates)
+    # all jobs were attempted: rewrite the queue empty (enqueue_jobs
+    # merges, so write the schema-tagged empty payload directly)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(f".{os.getpid()}.tmp")
+    tmp.write_text(json.dumps({QUEUE_SCHEMA_KEY: QUEUE_SCHEMA_VERSION,
+                               "jobs": []}))
+    os.replace(tmp, p)
+    return {"jobs": len(jobs), "cases": len(cases),
+            "recorded": summary["recorded"], "db_path": summary["db_path"],
+            "case_rows": summary["cases"], "queue_path": str(p)}
+
+
 def load_queue(path: Optional[Union[str, Path]] = None) -> List[dict]:
     """The queued jobs (empty if no queue file); raises ``ValueError`` on
     a schema-tag mismatch, like ``TuningDB.load``."""
